@@ -1,0 +1,60 @@
+"""Fig. 6: average packet latency vs injection rate, 4 destination ranges.
+
+Paper claims reproduced: DPM has the lowest latency at every range and
+saturates latest; MU saturates earliest at large ranges.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.noc import DEST_RANGES
+
+from .noc_common import ALGOS, run_curve, sweep_rates
+
+CACHE = pathlib.Path(__file__).parent / "results" / "fig6.json"
+
+
+def run(quick: bool = False, cycles: int | None = None):
+    cycles = cycles or (800 if quick else 1500)
+    rates = sweep_rates(quick)
+    rows = []
+    data = {}
+    for dr in DEST_RANGES:
+        curves, saturated, zero = run_curve(dr, rates, cycles)
+        data[str(dr)] = {
+            "curves": {
+                str(r): {a: v[:2] for a, v in row.items()}
+                for r, row in curves.items()
+            },
+            "saturated": saturated,
+        }
+        for rate, row in curves.items():
+            for algo, (lat, power, wall) in row.items():
+                rows.append(
+                    (
+                        f"fig6/range{dr[0]}-{dr[1]}/rate{rate}/{algo}",
+                        wall * 1e6,
+                        f"avg_latency={lat:.2f}",
+                    )
+                )
+        # per-range summary: DPM best latency at the last rate all algos live
+        common = [
+            r for r, row in curves.items() if len(row) == len(ALGOS)
+        ]
+        if common:
+            r = common[-1]
+            best = min(curves[r], key=lambda a: curves[r][a][0])
+            rows.append(
+                (
+                    f"fig6/range{dr[0]}-{dr[1]}/summary",
+                    0.0,
+                    f"best_at_rate_{r}={best};"
+                    + ";".join(
+                        f"{a}={curves[r][a][0]:.1f}" for a in curves[r]
+                    ),
+                )
+            )
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(data, indent=1))
+    return rows

@@ -1,0 +1,45 @@
+"""Fig. 8: PARSEC-like trace workloads — latency & power improvement vs MP.
+
+Netrace traces are unavailable offline; repro.noc.traffic synthesizes
+per-benchmark workloads matched to published characteristics (DESIGN.md §2).
+Paper: DPM up to ~23 % latency / ~14 % power improvement vs MP
+(fluidanimate); NMP ~5 % on canneal/swaptions.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.noc import PARSEC_PROFILES, NoCConfig, parsec_workload, simulate
+
+
+def run(quick: bool = False):
+    cycles = 800 if quick else 2000
+    base_rate = 0.085
+    rows = []
+    for bench in PARSEC_PROFILES:
+        cfg = NoCConfig()
+        wl = parsec_workload(cfg, bench, cycles, base_rate=base_rate, seed=5)
+        lat = {}
+        pwr = {}
+        for algo in ("MP", "NMP", "DPM"):
+            t0 = time.monotonic()
+            st = simulate(cfg, wl, algo)
+            lat[algo], pwr[algo] = st.avg_latency, st.dyn_power(cfg.energy)
+            rows.append(
+                (
+                    f"fig8/{bench}/{algo}",
+                    (time.monotonic() - t0) * 1e6,
+                    f"latency={lat[algo]:.2f};power={pwr[algo]:.1f}",
+                )
+            )
+        for algo in ("NMP", "DPM"):
+            rows.append(
+                (
+                    f"fig8/{bench}/{algo}_vs_MP",
+                    0.0,
+                    f"latency_improvement_pct="
+                    f"{100*(1-lat[algo]/lat['MP']):.1f};"
+                    f"power_improvement_pct={100*(1-pwr[algo]/pwr['MP']):.1f}",
+                )
+            )
+    return rows

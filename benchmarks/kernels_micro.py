@@ -1,0 +1,61 @@
+"""Kernel microbenches (CPU wall-time of the jnp paths; the Pallas kernels
+target TPU and are correctness-validated in interpret mode by the tests)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_reference, ssd_scan
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(
+        *args
+    ).block_until_ready()
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, KH, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, D))
+
+    flash = jax.jit(
+        lambda q, k, v: chunked_attention(q, k, v, chunk_q=256, chunk_k=256)
+    )
+
+    def naive(q, k, v):
+        G = H // KH
+        kk = jnp.repeat(k, G, 2)
+        vv = jnp.repeat(v, G, 2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * D**-0.5
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+    naive_j = jax.jit(naive)
+    rows.append(("kernels/attn_flash_jnp_1k", _bench(flash, q, k, v), "causal GQA"))
+    rows.append(("kernels/attn_naive_1k", _bench(naive_j, q, k, v), "materialized SxS"))
+
+    P, G2, N = 64, 1, 64
+    Hs = 8
+    x = jax.random.normal(key, (1, S, Hs, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, S, Hs)))
+    A = -jnp.exp(jax.random.normal(key, (Hs,)))
+    Bm = jax.random.normal(key, (1, S, G2, N))
+    Cm = jax.random.normal(key, (1, S, G2, N))
+    chunked = jax.jit(lambda *a: ssd_scan(*a, 128))
+    recur = jax.jit(lambda *a: ssd_reference(*a))
+    rows.append(("kernels/ssd_chunked_1k", _bench(chunked, x, dt, A, Bm, Cm), "SSD dual form"))
+    rows.append(("kernels/ssd_recurrent_1k", _bench(recur, x, dt, A, Bm, Cm), "per-step scan"))
+    return rows

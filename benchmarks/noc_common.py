@@ -1,0 +1,47 @@
+"""Shared helpers for the NoC paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.noc import NoCConfig, simulate, synthetic_workload
+
+ALGOS = ["MU", "MP", "NMP", "DPM"]
+
+
+def sweep_rates(quick: bool) -> list[float]:
+    if quick:
+        return [0.01, 0.03, 0.05, 0.07, 0.09]
+    return [0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.07, 0.08, 0.10, 0.12]
+
+
+def run_curve(
+    dest_range: tuple[int, int],
+    rates: list[float],
+    cycles: int,
+    seed: int = 3,
+    saturation_factor: float = 4.0,
+):
+    """(rate -> {algo: (latency, power_pj_per_cycle)}) + saturation rates."""
+    cfg = NoCConfig(dest_range=dest_range)
+    out: dict[float, dict[str, tuple[float, float]]] = {}
+    saturated: dict[str, float | None] = {a: None for a in ALGOS}
+    zero_load: dict[str, float] = {}
+    live = set(ALGOS)
+    for rate in rates:
+        wl = synthetic_workload(cfg, rate, cycles, seed=seed)
+        row = {}
+        for algo in list(live):
+            t0 = time.monotonic()
+            st = simulate(cfg, wl, algo)
+            lat = st.avg_latency
+            row[algo] = (lat, st.dyn_power(cfg.energy), time.monotonic() - t0)
+            if algo not in zero_load:
+                zero_load[algo] = lat
+            if (
+                saturated[algo] is None
+                and lat > saturation_factor * zero_load[algo]
+            ):
+                saturated[algo] = rate
+                live.discard(algo)  # beyond saturation: stop wasting time
+        out[rate] = row
+    return out, saturated, zero_load

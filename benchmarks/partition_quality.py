@@ -1,0 +1,53 @@
+"""Beyond-paper analysis: partition quality vs the restricted-family optimum,
+and the Definition-2 source-leg ablation (DESIGN.md §2)."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import brute_force_partition, dpm_partition, grid, plan
+
+
+def run(quick: bool = False):
+    g = grid(8)
+    rng = random.Random(17)
+    nodes = [(x, y) for x in range(8) for y in range(8)]
+    n_inst = 150 if quick else 400
+    rows = []
+    for dr in ((2, 5), (4, 8), (10, 16)):
+        tot = {"MU": 0, "MP": 0, "NMP": 0, "DPM": 0, "DPM_noleg": 0}
+        opt_gap = 0
+        opt_n = 0
+        t0 = time.monotonic()
+        for _ in range(n_inst):
+            k = rng.randint(*dr)
+            picks = rng.sample(nodes, k + 1)
+            src, dests = picks[0], picks[1:]
+            for a in ("MU", "MP", "NMP", "DPM"):
+                tot[a] += plan(a, g, src, dests).total_hops
+            tot["DPM_noleg"] += dpm_partition(
+                g, src, dests, include_source_leg=False
+            ).total_cost(True)
+            if k <= 8:  # brute force tractable
+                r = dpm_partition(g, src, dests)
+                opt, _ = brute_force_partition(g, src, dests)
+                opt_gap += r.total_cost() - opt
+                opt_n += 1
+        wall = (time.monotonic() - t0) * 1e6 / n_inst
+        for a, v in tot.items():
+            rows.append(
+                (
+                    f"partition_quality/range{dr[0]}-{dr[1]}/{a}",
+                    wall,
+                    f"avg_hops={v / n_inst:.2f}",
+                )
+            )
+        if opt_n:
+            rows.append(
+                (
+                    f"partition_quality/range{dr[0]}-{dr[1]}/opt_gap",
+                    0.0,
+                    f"mean_gap_vs_restricted_optimum={opt_gap / opt_n:.3f}",
+                )
+            )
+    return rows

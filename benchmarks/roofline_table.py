@@ -1,0 +1,76 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "dryrun_results"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "hymba-1.5b", "deepseek-v2-236b", "moonshot-v1-16b-a3b", "smollm-135m",
+    "stablelm-1.6b", "starcoder2-7b", "qwen1.5-32b", "mamba2-1.3b",
+    "musicgen-medium", "qwen2-vl-72b",
+]
+
+
+def load(mesh: str, variant: str = "baseline") -> dict:
+    out = {}
+    for f in RESULTS.glob(f"*__{mesh}__{variant}.json"):
+        d = json.loads(f.read_text())
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_row(d: dict) -> str:
+    r = d["roofline"]
+    dom = {"compute_s": "compute", "memory_s": "memory",
+           "collective_s": "collective"}[r["dominant"]]
+    return (
+        f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3f} | "
+        f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {dom} | "
+        f"{d['useful_flops_ratio']:.2f} | "
+        f"{d['model_flops_per_chip'] / max(d['hlo_flops_per_chip'],1e-9) * r['compute_s'] / max(max(r.values() if isinstance(r, dict) and False else [r['compute_s'], r['memory_s'], r['collective_s']]), 1e-12):.3f} |"
+    )
+
+
+def roofline_fraction(d: dict) -> float:
+    """useful-FLOPs time / step lower bound: the score §Perf drives up."""
+    r = d["roofline"]
+    useful_time = d["model_flops_per_chip"] / 197e12
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return useful_time / bound if bound else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    data = load(args.mesh, args.variant)
+    print(
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | roofline_frac |"
+    )
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = data.get((arch, shape))
+            if d is None:
+                continue
+            r = d["roofline"]
+            dom = {"compute_s": "compute", "memory_s": "memory",
+                   "collective_s": "collective"}[r["dominant"]]
+            print(
+                f"| {arch} | {shape} | {r['compute_s']:.3f} | "
+                f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {dom} | "
+                f"{d['useful_flops_ratio']:.3f} | {roofline_fraction(d):.3f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims sweep sizes.
+Roofline numbers come from the dry-run artifacts (benchmarks/dryrun_results,
+summarized by benchmarks/roofline_table.py), not from wall-time here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated module names (fig6,fig7,fig8,partition,tpu,kernels)",
+    )
+    args = ap.parse_args()
+
+    from . import (
+        fig6_latency,
+        fig7_power,
+        fig8_traces,
+        kernels_micro,
+        partition_quality,
+        tpu_multicast,
+    )
+
+    suites = {
+        "fig6": fig6_latency.run,
+        "fig7": fig7_power.run,
+        "fig8": fig8_traces.run,
+        "partition": partition_quality.run,
+        "tpu": tpu_multicast.run,
+        "kernels": kernels_micro.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        print(
+            f"{name}/_suite_wall,{(time.monotonic() - t0) * 1e6:.0f},ok",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fill EXPERIMENTS.md §Paper-repro verdicts from bench_output.txt."""
+from __future__ import annotations
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def parse(path=ROOT / "bench_output.txt"):
+    rows = {}
+    for line in path.read_text().splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            rows[parts[0]] = parts[2]
+    return rows
+
+
+def main():
+    rows = parse()
+    # Fig 6: DPM best at each range (summary rows)
+    fig6 = []
+    for dr in ("2-5", "4-8", "7-10", "10-16"):
+        key = f"fig6/range{dr}/summary"
+        if key in rows:
+            m = re.search(r"best_at_rate_([\d.]+)=(\w+)", rows[key])
+            if m:
+                fig6.append((dr, m.group(2), rows[key]))
+    print("Fig 6 best-algorithm per range (at the highest rate all algos ran):")
+    for dr, best, full in fig6:
+        print(f"  range {dr}: best={best}   [{full}]")
+    # Fig 7: DPM power improvement vs MU
+    print("\nFig 7 power improvement vs MU at MU saturation (paper: 7/16/22/35 %):")
+    for dr in ("2-5", "4-8", "7-10", "10-16"):
+        for algo in ("MP", "NMP", "DPM"):
+            key = f"fig7/range{dr}/{algo}_vs_MU"
+            if key in rows:
+                print(f"  {dr} {algo}: {rows[key]}")
+    # Fig 8
+    print("\nFig 8 improvements vs MP (paper: DPM up to 23 % lat / 14 % power):")
+    for line, val in rows.items():
+        if line.startswith("fig8/") and line.endswith("DPM_vs_MP"):
+            print(f"  {line.split('/')[1]}: {val}")
+
+
+if __name__ == "__main__":
+    main()

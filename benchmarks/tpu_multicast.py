@@ -1,0 +1,68 @@
+"""Beyond-paper: DPM multicast scheduling on the TPU pod torus (DESIGN.md §3).
+
+Compares ppermute schedules (rounds, alpha-beta time, total link-bytes) for
+DPM vs direct-send (MU) vs static multipath (MP) on the 16x16 single-pod
+torus, for the collective patterns the framework actually issues:
+  * parameter broadcast to a DP column (elastic re-shard / restore)
+  * dense 4x4-cluster broadcast (pod-slice rollout)
+  * sparse MoE-style dispatch (one source -> k random expert shards)
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.dist.multicast import Torus, dp_broadcast_schedule, schedule_multicasts
+
+MB = 2**20
+
+
+def run(quick: bool = False):
+    rows = []
+    t = Torus(16, 16)
+    cases = {
+        "dp_column_bcast": [((0, 0), [(0, y) for y in range(1, 16)])],
+        "cluster4x4_bcast": [
+            ((0, 0), [(x, y) for x in range(4) for y in range(4) if (x, y) != (0, 0)])
+        ],
+    }
+    rng = random.Random(5)
+    moe = []
+    for _ in range(4 if quick else 16):  # 16 sources dispatch to 6 shards
+        src = (rng.randrange(16), rng.randrange(16))
+        dests = []
+        while len(dests) < 6:
+            d = (rng.randrange(16), rng.randrange(16))
+            if d != src and d not in dests:
+                dests.append(d)
+        moe.append((src, dests))
+    cases["moe_top6_dispatch"] = moe
+
+    payloads = {"dp_column_bcast": 64 * MB, "cluster4x4_bcast": 16 * MB,
+                "moe_top6_dispatch": 4 * MB}
+    for case, reqs in cases.items():
+        for algo in ("MU", "MP", "DPM"):
+            t0 = time.monotonic()
+            sched = schedule_multicasts(t, reqs, algo)
+            cost = sched.cost(payloads[case])
+            rows.append(
+                (
+                    f"tpu_multicast/{case}/{algo}",
+                    (time.monotonic() - t0) * 1e6,
+                    f"rounds={cost['rounds']};time_us={cost['time_us']:.0f};"
+                    f"link_MB={cost['link_bytes'] / MB:.0f}",
+                )
+            )
+    # 1-D data-axis broadcast (ring) across schedulers
+    for algo in ("MU", "DPM"):
+        sched = dp_broadcast_schedule(16, algo)
+        cost = sched.cost(128 * MB)
+        rows.append(
+            (
+                f"tpu_multicast/dp_ring16/{algo}",
+                0.0,
+                f"rounds={cost['rounds']};time_us={cost['time_us']:.0f};"
+                f"link_MB={cost['link_bytes'] / MB:.0f}",
+            )
+        )
+    return rows

@@ -1,0 +1,29 @@
+"""Mini reproduction of the paper's headline results (Figs. 6-8 in small).
+
+    PYTHONPATH=src python examples/noc_paper_repro.py
+
+Full sweeps live in the benchmark harness: python -m benchmarks.run
+"""
+from repro.noc import NoCConfig, parsec_workload, simulate, synthetic_workload
+
+print("latency vs injection rate, dest range 4-8 (Fig. 6 style):")
+cfg = NoCConfig(dest_range=(4, 8))
+print(f"{'rate':>6} " + "".join(f"{a:>8}" for a in ("MU", "MP", "NMP", "DPM")))
+for rate in (0.02, 0.04, 0.06):
+    wl = synthetic_workload(cfg, rate, 800, seed=3)
+    lats = [simulate(cfg, wl, a).avg_latency for a in ("MU", "MP", "NMP", "DPM")]
+    print(f"{rate:>6} " + "".join(f"{latency:8.1f}" for latency in lats))
+
+print("\nfluidanimate-like trace vs MP baseline (Fig. 8 style):")
+cfg = NoCConfig()
+wl = parsec_workload(cfg, "fluidanimate", 1000, base_rate=0.085, seed=5)
+stats = {a: simulate(cfg, wl, a) for a in ("MP", "NMP", "DPM")}
+base_lat = stats["MP"].avg_latency
+base_pwr = stats["MP"].dyn_power(cfg.energy)
+for a, st in stats.items():
+    print(
+        f"  {a:4s} latency {st.avg_latency:7.1f} "
+        f"({100 * (1 - st.avg_latency / base_lat):+5.1f}% vs MP)   "
+        f"power {st.dyn_power(cfg.energy):7.1f} pJ/cyc "
+        f"({100 * (1 - st.dyn_power(cfg.energy) / base_pwr):+5.1f}%)"
+    )

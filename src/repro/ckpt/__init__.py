@@ -1,0 +1,4 @@
+"""Checkpointing: async committed saves, auto-resume, elastic re-shard."""
+from .checkpoint import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

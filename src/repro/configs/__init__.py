@@ -1,0 +1,69 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants."""
+from repro.models.config import SHAPES, ArchConfig, RunConfig, ShapeConfig
+
+from . import (
+    deepseek_v2_236b,
+    hymba_1_5b,
+    mamba2_1_3b,
+    moonshot_v1_16b,
+    musicgen_medium,
+    qwen1_5_32b,
+    qwen2_vl_72b,
+    smollm_135m,
+    stablelm_1_6b,
+    starcoder2_7b,
+)
+
+_MODULES = [
+    hymba_1_5b,
+    deepseek_v2_236b,
+    moonshot_v1_16b,
+    smollm_135m,
+    stablelm_1_6b,
+    starcoder2_7b,
+    qwen1_5_32b,
+    mamba2_1_3b,
+    musicgen_medium,
+    qwen2_vl_72b,
+]
+
+ARCHS: dict[str, ArchConfig] = {m.ARCH.name: m.ARCH for m in _MODULES}
+SMOKES: dict[str, ArchConfig] = {m.ARCH.name: m.SMOKE for m in _MODULES}
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    table = SMOKES if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(arch: str | None = None) -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, with long_500k restricted to
+    sub-quadratic archs (full-attention skips recorded by the caller)."""
+    out = []
+    for a, cfg in ARCHS.items():
+        if arch and a != arch:
+            continue
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.sub_quadratic:
+                continue
+            out.append((a, s))
+    return out
+
+
+__all__ = [
+    "ARCHS",
+    "SMOKES",
+    "SHAPES",
+    "ArchConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "cells",
+    "get_arch",
+    "get_shape",
+]

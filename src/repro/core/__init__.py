@@ -1,0 +1,66 @@
+"""Core contribution of the paper: dynamic partition merging multicast.
+
+Public API:
+    MeshGrid, grid                         — mesh geometry + Hamiltonian labels
+    basic_partitions, dpm_partition        — Definitions 1-3 + Algorithm 1
+    plan / PLANNERS                        — MU / DP / MP / NMP / DPM planners
+"""
+from .grid import Coord, MeshGrid, grid
+from .partition import (
+    ALL_CANDIDATE_IDS,
+    DPMResult,
+    PartitionCost,
+    basic_partitions,
+    brute_force_partition,
+    candidate_cost,
+    dpm_partition,
+    representative,
+)
+from .planner import (
+    PLANNERS,
+    MulticastPlan,
+    PacketPath,
+    plan,
+    plan_dp,
+    plan_dpm,
+    plan_mp,
+    plan_mu,
+    plan_nmp,
+)
+from .routing import (
+    dual_path_cost,
+    greedy_tour,
+    label_route,
+    multi_unicast_cost,
+    path_multicast,
+    xy_route,
+)
+
+__all__ = [
+    "ALL_CANDIDATE_IDS",
+    "Coord",
+    "DPMResult",
+    "MeshGrid",
+    "MulticastPlan",
+    "PLANNERS",
+    "PacketPath",
+    "PartitionCost",
+    "basic_partitions",
+    "brute_force_partition",
+    "candidate_cost",
+    "dpm_partition",
+    "dual_path_cost",
+    "greedy_tour",
+    "grid",
+    "label_route",
+    "multi_unicast_cost",
+    "path_multicast",
+    "plan",
+    "plan_dp",
+    "plan_dpm",
+    "plan_mp",
+    "plan_mu",
+    "plan_nmp",
+    "representative",
+    "xy_route",
+]

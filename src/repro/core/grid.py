@@ -1,0 +1,88 @@
+"""2-D mesh geometry and Hamiltonian (boustrophedon) labeling.
+
+The paper labels each node of an n x n mesh as
+
+    L(x, y) = y*n + x          if y is even
+    L(x, y) = y*n + n - x - 1  if y is odd
+
+which traces a Hamiltonian ("snake") path 0, 1, ..., n^2-1 through the mesh.
+The dual-path / multipath family of algorithms routes along this label order;
+the high-channel subnetwork contains every mesh link directed from a lower to
+a higher label and the low-channel subnetwork the reverse direction.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+Coord = tuple[int, int]
+
+
+@dataclass(frozen=True)
+class MeshGrid:
+    """An n_cols x n_rows 2-D mesh (the paper uses square 8x8)."""
+
+    n: int  # columns (x in [0, n))
+    m: int | None = None  # rows (y in [0, m)); defaults to n
+
+    @property
+    def rows(self) -> int:
+        return self.m if self.m is not None else self.n
+
+    @property
+    def num_nodes(self) -> int:
+        return self.n * self.rows
+
+    # -- labeling ------------------------------------------------------------
+    def label(self, x: int, y: int) -> int:
+        """Boustrophedon label used by dual-path/MP/DPM."""
+        if y % 2 == 0:
+            return y * self.n + x
+        return y * self.n + self.n - x - 1
+
+    def unlabel(self, lab: int) -> Coord:
+        y, r = divmod(lab, self.n)
+        x = r if y % 2 == 0 else self.n - r - 1
+        return x, y
+
+    def row_major(self, x: int, y: int) -> int:
+        """Row-major label L = y*n + x (used by NMP [18])."""
+        return y * self.n + x
+
+    # -- geometry ------------------------------------------------------------
+    def in_bounds(self, x: int, y: int) -> bool:
+        return 0 <= x < self.n and 0 <= y < self.rows
+
+    def neighbors(self, x: int, y: int) -> list[Coord]:
+        out = []
+        for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+            nx, ny = x + dx, y + dy
+            if self.in_bounds(nx, ny):
+                out.append((nx, ny))
+        return out
+
+    @staticmethod
+    def manhattan(a: Coord, b: Coord) -> int:
+        return abs(a[0] - b[0]) + abs(a[1] - b[1])
+
+    # -- vectorized helpers (used by the jnp reference / kernels) -----------
+    def all_labels(self) -> np.ndarray:
+        """(rows, n) array of boustrophedon labels."""
+        ys, xs = np.mgrid[0 : self.rows, 0 : self.n]
+        even = ys % 2 == 0
+        return np.where(even, ys * self.n + xs, ys * self.n + self.n - xs - 1)
+
+    def label_table(self) -> np.ndarray:
+        """label -> (x, y), shape (num_nodes, 2)."""
+        out = np.zeros((self.num_nodes, 2), dtype=np.int32)
+        for y in range(self.rows):
+            for x in range(self.n):
+                out[self.label(x, y)] = (x, y)
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def grid(n: int, m: int | None = None) -> MeshGrid:
+    return MeshGrid(n, m)

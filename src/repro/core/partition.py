@@ -1,0 +1,227 @@
+"""Destination-set partitioning: Definitions 1-3 and Algorithm 1 (DPM).
+
+The destination set partition problem (Section III.A) is an exact weighted
+set-cover instance: choose disjoint partitions covering all destinations with
+minimum total routing cost. DPM is the paper's greedy heuristic over a
+restricted candidate family: the 8 basic geometric partitions P0..P7 around
+the source plus merges of up to 3 *consecutive* basic partitions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .grid import Coord, MeshGrid
+from .routing import dual_path_cost, multi_unicast_cost, xy_route
+
+# Candidate index sets: 8 singles, 8 consecutive pairs, 8 consecutive triples.
+SINGLE_IDS: list[tuple[int, ...]] = [(i,) for i in range(8)]
+PAIR_IDS: list[tuple[int, ...]] = [(i, (i + 1) % 8) for i in range(8)]
+TRIPLE_IDS: list[tuple[int, ...]] = [(i, (i + 1) % 8, (i + 2) % 8) for i in range(8)]
+ALL_CANDIDATE_IDS: list[tuple[int, ...]] = SINGLE_IDS + PAIR_IDS + TRIPLE_IDS
+
+
+def basic_partitions(src: Coord, dests: list[Coord]) -> list[list[Coord]]:
+    """Split destinations into the 8 basic partitions P0..P7 around ``src``.
+
+    P0: x>sx, y>sy   P1: x=sx, y>sy   P2: x<sx, y>sy   P3: x<sx, y=sy
+    P4: x<sx, y<sy   P5: x=sx, y<sy   P6: x>sx, y<sy   P7: x>sx, y=sy
+    (counter-clockwise starting from the upper-right quadrant, Fig. 2a).
+    Edge/corner sources simply leave the out-of-mesh partitions empty.
+    """
+    sx, sy = src
+    parts: list[list[Coord]] = [[] for _ in range(8)]
+    for d in dests:
+        dx, dy = d
+        if dx > sx and dy > sy:
+            parts[0].append(d)
+        elif dx == sx and dy > sy:
+            parts[1].append(d)
+        elif dx < sx and dy > sy:
+            parts[2].append(d)
+        elif dx < sx and dy == sy:
+            parts[3].append(d)
+        elif dx < sx and dy < sy:
+            parts[4].append(d)
+        elif dx == sx and dy < sy:
+            parts[5].append(d)
+        elif dx > sx and dy < sy:
+            parts[6].append(d)
+        elif dx > sx and dy == sy:
+            parts[7].append(d)
+        else:  # d == src: already "delivered"; drop it
+            pass
+    return parts
+
+
+@dataclass
+class PartitionCost:
+    """Cost record for one candidate partition (Definitions 1-2)."""
+
+    ids: tuple[int, ...]
+    dests: list[Coord]
+    rep: Coord | None  # representative node R (Definition 1)
+    cost_mu: int  # C_t: multiple unicast from R
+    cost_dp: int  # C_p: dual-path from R
+    source_leg: int  # |S -> R| XY hops
+    mode: str  # "MU" | "DP" — the cheaper of the two
+
+    def cost(self, include_source_leg: bool) -> int:
+        base = min(self.cost_mu, self.cost_dp)
+        return base + (self.source_leg if include_source_leg else 0)
+
+
+def representative(g: MeshGrid, src: Coord, dests: list[Coord]) -> Coord:
+    """Definition 1: nearest destination to the source (Manhattan).
+
+    Ties broken by smallest boustrophedon label for determinism.
+    """
+    return min(dests, key=lambda d: (g.manhattan(src, d), g.label(*d)))
+
+
+def candidate_cost(
+    g: MeshGrid, src: Coord, ids: tuple[int, ...], dests: list[Coord]
+) -> PartitionCost:
+    """Definition 2: C = min(C_t, C_p), measured from the representative R.
+
+    C_t = sum of Manhattan(R, d); C_p = dual-path hop count from R. When the
+    two tie, MU is preferred (the paper: "the overhead of computing D_H, D_L
+    is eliminated using MU").
+    """
+    if not dests:
+        return PartitionCost(ids, [], None, 0, 0, 0, "MU")
+    rep = representative(g, src, dests)
+    rest = [d for d in dests if d != rep]
+    cost_mu = multi_unicast_cost(g, rep, rest)
+    cost_dp = dual_path_cost(g, rep, rest)
+    source_leg = len(xy_route(g, src, rep)) - 1
+    mode = "MU" if cost_mu <= cost_dp else "DP"
+    return PartitionCost(ids, list(dests), rep, cost_mu, cost_dp, source_leg, mode)
+
+
+@dataclass
+class DPMResult:
+    """Final partition set I with per-partition routing decisions."""
+
+    partitions: list[PartitionCost]
+    iterations: int  # greedy merge iterations taken (paper: converges <= 4)
+    savings_trace: list[tuple[tuple[int, ...], int]] = field(default_factory=list)
+
+    def total_cost(self, include_source_leg: bool = True) -> int:
+        return sum(p.cost(include_source_leg) for p in self.partitions)
+
+
+def dpm_partition(
+    g: MeshGrid,
+    src: Coord,
+    dests: list[Coord],
+    include_source_leg: bool = True,
+    max_merge: int = 3,
+) -> DPMResult:
+    """Algorithm 1: Dynamic Partition Merging.
+
+    ``include_source_leg`` controls whether the S->R XY leg is counted inside
+    C_i (see DESIGN.md §2 — Definition 2 as printed excludes it; the stated
+    objective function includes it; default True).
+    ``max_merge`` is the paper's limit of 3 consecutive partitions.
+    """
+    parts = basic_partitions(src, dests)
+
+    candidate_ids = list(SINGLE_IDS)
+    if max_merge >= 2:
+        candidate_ids += PAIR_IDS
+    if max_merge >= 3:
+        candidate_ids += TRIPLE_IDS
+
+    costs: dict[tuple[int, ...], PartitionCost] = {}
+    for ids in candidate_ids:
+        union: list[Coord] = []
+        for i in ids:
+            union.extend(parts[i])
+        costs[ids] = candidate_cost(g, src, ids, union)
+
+    # Definition 3: saving of each merged candidate vs its components.
+    savings: dict[tuple[int, ...], int] = {}
+    for ids in candidate_ids:
+        if len(ids) == 1:
+            continue
+        if not costs[ids].dests:
+            continue
+        merged = costs[ids].cost(include_source_leg)
+        split = sum(costs[(i,)].cost(include_source_leg) for i in ids)
+        savings[ids] = max(0, split - merged)
+
+    chosen: list[tuple[int, ...]] = []
+    iterations = 0
+    trace: list[tuple[tuple[int, ...], int]] = []
+    while True:
+        best_ids, best_a = None, 0
+        for ids, a in savings.items():
+            if a <= 0:
+                continue
+            # tie-break: fewer merged partitions first, then smallest index.
+            if (
+                best_ids is None
+                or a > best_a
+                or (a == best_a and (len(ids), ids) < (len(best_ids), best_ids))
+            ):
+                best_ids, best_a = ids, a
+        if best_ids is None:
+            break
+        iterations += 1
+        chosen.append(best_ids)
+        trace.append((best_ids, best_a))
+        covered = set(best_ids)
+        for ids in list(savings):
+            if covered & set(ids):
+                savings[ids] = 0
+
+    covered: set[int] = set()
+    for ids in chosen:
+        covered |= set(ids)
+
+    final: list[PartitionCost] = [costs[ids] for ids in chosen]
+    # Leftover basic partitions that did not take part in any merge.
+    for i in range(8):
+        if i not in covered and parts[i]:
+            final.append(costs[(i,)])
+    return DPMResult(final, iterations, trace)
+
+
+def brute_force_partition(
+    g: MeshGrid, src: Coord, dests: list[Coord], include_source_leg: bool = True
+) -> tuple[int, list[tuple[int, ...]]]:
+    """Exact minimum over DPM's candidate family (exponential; tests only).
+
+    Enumerates every exact cover of the non-empty basic partitions by
+    candidate index sets and returns (min cost, chosen ids). This is the
+    optimum of the *restricted* set-cover the paper's heuristic addresses.
+    """
+    parts = basic_partitions(src, dests)
+    nonempty = frozenset(i for i in range(8) if parts[i])
+    costs: dict[tuple[int, ...], int] = {}
+    for ids in ALL_CANDIDATE_IDS:
+        union: list[Coord] = []
+        for i in ids:
+            union.extend(parts[i])
+        costs[ids] = candidate_cost(g, src, ids, union).cost(include_source_leg)
+
+    best = (10**9, [])
+
+    def rec(remaining: frozenset[int], acc_cost: int, acc: list[tuple[int, ...]]):
+        nonlocal best
+        if acc_cost >= best[0]:
+            return
+        if not remaining:
+            best = (acc_cost, list(acc))
+            return
+        pivot = min(remaining)
+        for ids in ALL_CANDIDATE_IDS:
+            s = set(ids) & nonempty
+            if pivot not in s or not s <= remaining:
+                continue
+            acc.append(ids)
+            rec(remaining - s, acc_cost + costs[ids], acc)
+            acc.pop()
+
+    rec(nonempty, 0, [])
+    return best

@@ -1,0 +1,197 @@
+"""Multicast planners: MU, DP (dual-path), MP (multipath), NMP, DPM.
+
+Each planner maps (source, destination set) -> MulticastPlan: a list of
+physical packet paths. A path is an explicit hop sequence plus the set of
+nodes where a copy is absorbed. DPM paths may spawn *child* packets at the
+representative node (the MU-mode re-injection); the simulator honours the
+dependency, and hop-count accounting sums parent and child paths.
+
+These planners run on the host (plan/trace time); the vectorized cost-table
+computation also exists as a Pallas kernel (kernels/dpm_cost) with a jnp
+reference, validated against this module.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+from .grid import Coord, MeshGrid, grid
+from .partition import basic_partitions, dpm_partition
+from .routing import greedy_tour, path_multicast, xy_route
+
+
+@dataclass
+class PacketPath:
+    """One wormhole packet: hops[0] is the injection node."""
+
+    hops: list[Coord]
+    deliveries: list[Coord]
+    parent: int | None = None  # index of parent path; injected when the
+    # parent delivers at hops[0] (DPM MU re-injection)
+
+    @property
+    def hop_count(self) -> int:
+        return len(self.hops) - 1
+
+
+@dataclass
+class MulticastPlan:
+    algorithm: str
+    src: Coord
+    dests: list[Coord]
+    paths: list[PacketPath] = field(default_factory=list)
+
+    @property
+    def total_hops(self) -> int:
+        return sum(p.hop_count for p in self.paths)
+
+    def check_covers(self) -> bool:
+        delivered = set()
+        for p in self.paths:
+            delivered |= set(p.deliveries)
+        return delivered == set(self.dests)
+
+
+def _deliveries_on(path: list[Coord], dests: set[Coord]) -> list[Coord]:
+    seen, out = set(), []
+    for node in path:
+        if node in dests and node not in seen:
+            seen.add(node)
+            out.append(node)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+def plan_mu(g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+    """Multiple unicast: one XY packet per destination."""
+    plan = MulticastPlan("MU", src, list(dests))
+    for d in dests:
+        plan.paths.append(PacketPath(xy_route(g, src, d), [d]))
+    return plan
+
+
+def plan_dp(g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+    """Dual-path [10]: D_H in ascending label order, D_L descending."""
+    plan = MulticastPlan("DP", src, list(dests))
+    ls = g.label(*src)
+    d_h = [d for d in dests if g.label(*d) > ls]
+    d_l = [d for d in dests if g.label(*d) < ls]
+    for group, high in ((d_h, True), (d_l, False)):
+        if group:
+            path = path_multicast(g, src, group, high=high)
+            plan.paths.append(PacketPath(path, _deliveries_on(path, set(group))))
+    return plan
+
+
+def _mp_groups(g: MeshGrid, src: Coord, dests: list[Coord]):
+    """MP's static 4-way split: label high/low x {x < sx, x >= sx}."""
+    ls = g.label(*src)
+    sx = src[0]
+    d_h = [d for d in dests if g.label(*d) > ls]
+    d_l = [d for d in dests if g.label(*d) < ls]
+    return (
+        [d for d in d_h if d[0] < sx],  # D_H1
+        [d for d in d_h if d[0] >= sx],  # D_H2
+        [d for d in d_l if d[0] < sx],  # D_L1
+        [d for d in d_l if d[0] >= sx],  # D_L2
+    )
+
+
+def plan_mp(g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+    """Multipath [11]: four label-ordered path packets, one per static group."""
+    plan = MulticastPlan("MP", src, list(dests))
+    g_h1, g_h2, g_l1, g_l2 = _mp_groups(g, src, dests)
+    for group, high in ((g_h1, True), (g_h2, True), (g_l1, False), (g_l2, False)):
+        if group:
+            path = path_multicast(g, src, group, high=high)
+            plan.paths.append(PacketPath(path, _deliveries_on(path, set(group))))
+    return plan
+
+
+def plan_nmp(g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+    """NMP [18]: MP's static partition, but nearest-first greedy tours with
+    XY legs (destinations sorted by hop distance instead of label)."""
+    plan = MulticastPlan("NMP", src, list(dests))
+    for group in _mp_groups(g, src, dests):
+        if group:
+            path = greedy_tour(g, src, group)
+            plan.paths.append(PacketPath(path, _deliveries_on(path, set(group))))
+    return plan
+
+
+# --------------------------------------------------------------------------
+# DPM
+# --------------------------------------------------------------------------
+def plan_dpm(
+    g: MeshGrid,
+    src: Coord,
+    dests: list[Coord],
+    include_source_leg: bool = True,
+    max_merge: int = 3,
+) -> MulticastPlan:
+    """DPM: Algorithm 1 partitions, then per-partition delivery:
+
+    S --XY--> R, then from R either dual-path (one packet continues) or
+    multiple unicast (child packets re-injected at R).
+    """
+    plan = MulticastPlan("DPM", src, list(dests))
+    result = dpm_partition(g, src, dests, include_source_leg, max_merge)
+    for part in result.partitions:
+        if not part.dests:
+            continue
+        rep = part.rep
+        assert rep is not None
+        head = xy_route(g, src, rep)
+        rest = [d for d in part.dests if d != rep]
+        if part.mode == "DP" and rest:
+            lr = g.label(*rep)
+            d_h = [d for d in rest if g.label(*d) > lr]
+            d_l = [d for d in rest if g.label(*d) < lr]
+            # The chain continues into the *larger* side from the head packet;
+            # the other side is a sibling packet re-injected at R.
+            first, second = (d_h, d_l) if len(d_h) >= len(d_l) else (d_l, d_h)
+            tail = path_multicast(g, rep, first, high=first is d_h) if first else [rep]
+            full = head + tail[1:]
+            deliver = _deliveries_on(full, set(part.dests))
+            parent_idx = len(plan.paths)
+            plan.paths.append(PacketPath(full, deliver))
+            if second:
+                spath = path_multicast(g, rep, second, high=second is d_h)
+                plan.paths.append(
+                    PacketPath(
+                        spath,
+                        _deliveries_on(spath, set(second)),
+                        parent=parent_idx,
+                    )
+                )
+        else:  # MU mode (or singleton partition)
+            deliver = _deliveries_on(head, set(part.dests))
+            parent_idx = len(plan.paths)
+            plan.paths.append(PacketPath(head, deliver))
+            remaining = [d for d in rest if d not in set(deliver)]
+            for d in remaining:
+                plan.paths.append(
+                    PacketPath(xy_route(g, rep, d), [d], parent=parent_idx)
+                )
+    return plan
+
+
+PLANNERS = {
+    "MU": plan_mu,
+    "DP": plan_dp,
+    "MP": plan_mp,
+    "NMP": plan_nmp,
+    "DPM": plan_dpm,
+}
+
+
+@functools.lru_cache(maxsize=200_000)
+def _plan_cached(n: int, m: int, algo: str, src: Coord, dests: tuple[Coord, ...]):
+    return PLANNERS[algo](grid(n, m), src, list(dests))
+
+
+def plan(algo: str, g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+    """Cached planner entry point (plans are deterministic per instance)."""
+    return _plan_cached(g.n, g.rows, algo, src, tuple(sorted(set(dests))))

@@ -1,0 +1,136 @@
+"""Unicast and path-based multicast routing functions on the 2-D mesh.
+
+Three routing functions are used by the algorithms in this repo:
+
+* ``xy_route``      — dimension-ordered XY (x first, then y). Used by MU and by
+                      the S->R delivery leg of DPM.
+* ``label_route``   — the Lin–McKinley dual-path routing function: in the
+                      high-channel subnetwork move to the neighbor with the
+                      largest label that does not exceed the target label; in
+                      the low-channel subnetwork the mirror rule. Guarantees
+                      progress along the Hamiltonian path with mesh shortcuts.
+* ``greedy_tour``   — NMP's nearest-destination-first tour with XY legs.
+
+All functions return explicit hop sequences (lists of (x, y) coords starting
+at the source), which the cycle-level simulator consumes directly and whose
+lengths are the hop-count costs used by the planners.
+"""
+from __future__ import annotations
+
+from .grid import Coord, MeshGrid
+
+
+def xy_route(g: MeshGrid, src: Coord, dst: Coord) -> list[Coord]:
+    """Dimension-ordered route, inclusive of both endpoints."""
+    x, y = src
+    path = [src]
+    while x != dst[0]:
+        x += 1 if dst[0] > x else -1
+        path.append((x, y))
+    while y != dst[1]:
+        y += 1 if dst[1] > y else -1
+        path.append((x, y))
+    return path
+
+
+def label_route_step(g: MeshGrid, cur: Coord, target: Coord, high: bool) -> Coord:
+    """One hop of the dual-path routing function.
+
+    high=True: next = argmax over neighbors of label(v) s.t. label(v) <= label(target)
+    high=False: next = argmin over neighbors of label(v) s.t. label(v) >= label(target)
+    """
+    lt = g.label(*target)
+    best = None
+    best_lab = None
+    for v in g.neighbors(*cur):
+        lv = g.label(*v)
+        if high:
+            if lv <= lt and (best_lab is None or lv > best_lab):
+                best, best_lab = v, lv
+        else:
+            if lv >= lt and (best_lab is None or lv < best_lab):
+                best, best_lab = v, lv
+    if best is None:  # cannot happen on a connected mesh with valid direction
+        raise RuntimeError(f"label_route stuck at {cur} -> {target} (high={high})")
+    return best
+
+
+def label_route(g: MeshGrid, src: Coord, dst: Coord, high: bool) -> list[Coord]:
+    """Full label-ordered route src -> dst inside one subnetwork."""
+    path = [src]
+    cur = src
+    guard = 4 * g.num_nodes
+    while cur != dst:
+        cur = label_route_step(g, cur, dst, high)
+        path.append(cur)
+        guard -= 1
+        if guard == 0:
+            raise RuntimeError("label_route did not converge")
+    return path
+
+
+def path_multicast(
+    g: MeshGrid, src: Coord, dests: list[Coord], high: bool
+) -> list[Coord]:
+    """Path-based multicast: visit ``dests`` in label order within a subnetwork.
+
+    ``high=True`` visits in ascending label order (all dest labels must be
+    > label(src)); ``high=False`` descending. A destination passed through en
+    route is considered delivered at that point (wormhole pass-through
+    delivery), so the walk always heads for the nearest-in-label-order
+    unvisited destination.
+    Returns the full hop sequence (deliveries are simply path points that are
+    destinations).
+    """
+    if not dests:
+        return [src]
+    remaining = sorted(dests, key=lambda d: g.label(*d), reverse=not high)
+    path = [src]
+    cur = src
+    pending = list(remaining)
+    while pending:
+        target = pending[0]
+        cur = label_route_step(g, cur, target, high)
+        path.append(cur)
+        pending = [d for d in pending if d != cur]
+    return path
+
+
+def greedy_tour(g: MeshGrid, src: Coord, dests: list[Coord]) -> list[Coord]:
+    """NMP-style tour: repeatedly go (XY) to the nearest remaining destination."""
+    path = [src]
+    cur = src
+    pending = list(dests)
+    while pending:
+        nxt = min(pending, key=lambda d: (g.manhattan(cur, d), g.row_major(*d)))
+        leg = xy_route(g, cur, nxt)
+        path.extend(leg[1:])
+        cur = nxt
+        pending = [d for d in pending if d != cur]
+        # pass-through deliveries on the leg
+        leg_set = set(leg)
+        pending = [d for d in pending if d not in leg_set]
+    return path
+
+
+def dual_path_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
+    """Hop count of dual-path routing from ``src`` (Definition 2's C_p).
+
+    Destinations with label > label(src) are served by the high-channel chain
+    in ascending order; label < label(src) by the low-channel chain in
+    descending order.
+    """
+    ls = g.label(*src)
+    d_h = [d for d in dests if g.label(*d) > ls]
+    d_l = [d for d in dests if g.label(*d) < ls]
+    cost = 0
+    if d_h:
+        cost += len(path_multicast(g, src, d_h, high=True)) - 1
+    if d_l:
+        cost += len(path_multicast(g, src, d_l, high=False)) - 1
+    return cost
+
+
+def multi_unicast_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
+    """Definition 2's C_t: sum of Manhattan distances src -> each destination."""
+    return sum(g.manhattan(src, d) for d in dests)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: batched DPM partition-cost tables (Definitions 1-3).
+
+This is the paper's planner compute, vectorized over many multicast requests
+(the situation a TPU-side planner faces: one plan per expert-dispatch group
+per step). For a tile of packets the kernel evaluates all 24 candidate
+partitions (8 basic + 8 pairs + 8 triples of consecutive partitions):
+
+    rep[c]  = argmin_{d in cand} (manhattan(S, d), label(d))   (Definition 1)
+    cost[c] = sum_{d in cand} manhattan(rep, d) [+ |S->rep|]   (C_t of Def. 2)
+
+The dual-path cost C_p needs a sequential path walk and stays host-side
+(repro.core); MU-cost planning is exact for partitions where MU wins (the
+common case on a torus — see DESIGN.md §3). Greedy merging over the table is
+vectorized jnp in ops.py.
+
+Block layout: a tile of TP packets x all NN mesh nodes in VMEM; integer/VPU
+work only (no MXU), grid = n_tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# candidate index sets: 8 singles, 8 consecutive pairs, 8 consecutive triples
+CANDS: list[tuple[int, ...]] = (
+    [(i,) for i in range(8)]
+    + [(i, (i + 1) % 8) for i in range(8)]
+    + [(i, (i + 1) % 8, (i + 2) % 8) for i in range(8)]
+)
+BIG = 1 << 20
+
+
+def _kernel(mask_ref, sxy_ref, cost_ref, rep_ref, *, n: int, m: int, leg: bool):
+    NN = n * m
+    node = jax.lax.iota(jnp.int32, NN)
+    xs = node % n  # row-major node index
+    ys = node // n
+    blabel = jnp.where(ys % 2 == 0, ys * n + xs, ys * n + (n - 1 - xs))
+
+    dm = mask_ref[...]  # (TP, NN) int32 0/1
+    sx = sxy_ref[:, 0:1]  # (TP, 1)
+    sy = sxy_ref[:, 1:2]
+
+    gx = xs[None, :] > sx
+    lx = xs[None, :] < sx
+    ex = xs[None, :] == sx
+    gy = ys[None, :] > sy
+    ly = ys[None, :] < sy
+    ey = ys[None, :] == sy
+    # P0..P7 counter-clockwise from the upper-right quadrant (Fig. 2a)
+    parts = [
+        gx & gy, ex & gy, lx & gy, lx & ey,
+        lx & ly, ex & ly, gx & ly, gx & ey,
+    ]
+
+    dsrc = jnp.abs(xs[None, :] - sx) + jnp.abs(ys[None, :] - sy)  # (TP, NN)
+
+    for ci, ids in enumerate(CANDS):
+        cm = parts[ids[0]]
+        for i in ids[1:]:
+            cm = cm | parts[i]
+        sel = (dm > 0) & cm  # (TP, NN) destinations in this candidate
+        any_sel = sel.any(axis=1)
+        # representative: argmin (dist, label)
+        key = jnp.where(sel, dsrc * BIG + blabel[None, :], jnp.int32(2**30))
+        rep = jnp.argmin(key, axis=1).astype(jnp.int32)  # (TP,)
+        rx = rep % n
+        ry = rep // n
+        drep = jnp.abs(xs[None, :] - rx[:, None]) + jnp.abs(
+            ys[None, :] - ry[:, None]
+        )
+        ct = jnp.sum(jnp.where(sel, drep, 0), axis=1).astype(jnp.int32)
+        if leg:
+            sleg = jnp.abs(rx - sx[:, 0]) + jnp.abs(ry - sy[:, 0])
+            ct = ct + sleg
+        cost_ref[:, ci] = jnp.where(any_sel, ct, 0)
+        rep_ref[:, ci] = jnp.where(any_sel, rep, -1)
+
+
+def dpm_cost_table(
+    dest_mask: jax.Array,  # (P, NN) int32 0/1 (row-major nodes)
+    src_xy: jax.Array,  # (P, 2) int32
+    *,
+    n: int,
+    m: int | None = None,
+    include_source_leg: bool = True,
+    tile: int = 128,
+    interpret: bool = False,
+):
+    m = m or n
+    P, NN = dest_mask.shape
+    assert NN == n * m
+    pad = (-P) % tile
+    if pad:
+        dest_mask = jnp.pad(dest_mask, [(0, pad), (0, 0)])
+        src_xy = jnp.pad(src_xy, [(0, pad), (0, 0)])
+    Pp = P + pad
+    kernel = functools.partial(_kernel, n=n, m=m, leg=include_source_leg)
+    costs, reps = pl.pallas_call(
+        kernel,
+        grid=(Pp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, NN), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 24), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 24), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Pp, 24), jnp.int32),
+            jax.ShapeDtypeStruct((Pp, 24), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dest_mask.astype(jnp.int32), src_xy.astype(jnp.int32))
+    return costs[:P], reps[:P]

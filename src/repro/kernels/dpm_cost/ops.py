@@ -1,0 +1,102 @@
+"""Jit'd DPM planner fast path: kernel cost table + vectorized greedy merge.
+
+``dpm_plan(dest_mask, src_xy)`` returns, fully on device and batched over
+packets, the final partition selection of Algorithm 1 under the MU cost
+model: a (P, 24) bool matrix of chosen candidates. Used by the TPU multicast
+scheduler for batched plan evaluation, and validated against the host
+planner (repro.core) in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dpm_cost import CANDS, dpm_cost_table
+
+_SINGLES = jnp.arange(8)
+# candidate -> bitmask over the 8 basic partitions
+_CAND_BITS = jnp.array(
+    [sum(1 << i for i in ids) for ids in CANDS], dtype=jnp.int32
+)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "m", "include_source_leg", "interpret")
+)
+def dpm_plan(
+    dest_mask: jax.Array,  # (P, NN)
+    src_xy: jax.Array,  # (P, 2)
+    *,
+    n: int,
+    m: int | None = None,
+    include_source_leg: bool = True,
+    interpret: bool | None = None,
+):
+    """Algorithm 1 (greedy partition merging), batched. Returns
+    (chosen (P,24) bool, costs (P,24) int32, reps (P,24) int32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    costs, reps = dpm_cost_table(
+        dest_mask,
+        src_xy,
+        n=n,
+        m=m,
+        include_source_leg=include_source_leg,
+        interpret=interpret,
+    )
+    P = costs.shape[0]
+    nonempty = reps >= 0  # (P, 24)
+
+    # saving of each merged candidate vs its singles (Definition 3)
+    split_cost = jnp.zeros((P, 24), jnp.int32)
+    for ci, ids in enumerate(CANDS):
+        if len(ids) == 1:
+            continue
+        sc = sum(costs[:, i] for i in ids)
+        split_cost = split_cost.at[:, ci].set(sc)
+    saving0 = jnp.where(
+        (jnp.arange(24) >= 8)[None, :] & nonempty,
+        jnp.maximum(0, split_cost - costs),
+        0,
+    )
+
+    # tie-break: fewer partitions first, then smaller index -> encode
+    # priority = saving * 64 - (len(ids) * 8 + ci_mod) so larger is better
+    sizes = jnp.array([len(ids) for ids in CANDS], jnp.int32)
+    prio_adj = sizes * 32 + jnp.arange(24, dtype=jnp.int32)
+
+    def step(state, _):
+        saving, covered, chosen = state  # covered: (P,) int32 bitmask
+        # zero savings of candidates overlapping covered partitions
+        overlap = (_CAND_BITS[None, :] & covered[:, None]) != 0
+        s = jnp.where(overlap, 0, saving)
+        prio = s * 1024 - prio_adj[None, :]
+        best = jnp.argmax(jnp.where(s > 0, prio, -(2**30)), axis=1)
+        has = jnp.take_along_axis(s, best[:, None], 1)[:, 0] > 0
+        bbits = _CAND_BITS[best]
+        covered = jnp.where(has, covered | bbits, covered)
+        chosen = chosen.at[jnp.arange(P), best].set(
+            chosen[jnp.arange(P), best] | has
+        )
+        return (s, covered, chosen), None
+
+    chosen0 = jnp.zeros((P, 24), bool)
+    covered0 = jnp.zeros((P,), jnp.int32)
+    (saving, covered, chosen), _ = jax.lax.scan(
+        step, (saving0, covered0, chosen0), None, length=4
+    )
+    # leftover non-empty singles not covered by a chosen merge
+    single_bit = 1 << jnp.arange(8, dtype=jnp.int32)
+    leftover = nonempty[:, :8] & ((covered[:, None] & single_bit[None, :]) == 0)
+    chosen = chosen.at[:, :8].set(chosen[:, :8] | leftover)
+    return chosen, costs, reps
+
+
+def total_plan_cost(chosen, costs):
+    return jnp.sum(jnp.where(chosen, costs, 0), axis=1)

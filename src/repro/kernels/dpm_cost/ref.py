@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the dpm_cost kernel (same math, no pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .dpm_cost import BIG, CANDS
+
+
+def dpm_cost_table_ref(dest_mask, src_xy, *, n, m=None, include_source_leg=True):
+    m = m or n
+    P, NN = dest_mask.shape
+    node = jnp.arange(NN, dtype=jnp.int32)
+    xs, ys = node % n, node // n
+    blabel = jnp.where(ys % 2 == 0, ys * n + xs, ys * n + (n - 1 - xs))
+    dm = dest_mask.astype(jnp.int32)
+    sx, sy = src_xy[:, 0:1], src_xy[:, 1:2]
+    gx, lx, ex = xs[None] > sx, xs[None] < sx, xs[None] == sx
+    gy, ly, ey = ys[None] > sy, ys[None] < sy, ys[None] == sy
+    parts = [
+        gx & gy, ex & gy, lx & gy, lx & ey,
+        lx & ly, ex & ly, gx & ly, gx & ey,
+    ]
+    dsrc = jnp.abs(xs[None] - sx) + jnp.abs(ys[None] - sy)
+    costs, reps = [], []
+    for ids in CANDS:
+        cm = parts[ids[0]]
+        for i in ids[1:]:
+            cm = cm | parts[i]
+        sel = (dm > 0) & cm
+        any_sel = sel.any(1)
+        key = jnp.where(sel, dsrc * BIG + blabel[None], jnp.int32(2**30))
+        rep = jnp.argmin(key, 1).astype(jnp.int32)
+        rx, ry = rep % n, rep // n
+        drep = jnp.abs(xs[None] - rx[:, None]) + jnp.abs(ys[None] - ry[:, None])
+        ct = jnp.sum(jnp.where(sel, drep, 0), 1).astype(jnp.int32)
+        if include_source_leg:
+            ct = ct + jnp.abs(rx - sx[:, 0]) + jnp.abs(ry - sy[:, 0])
+        costs.append(jnp.where(any_sel, ct, 0))
+        reps.append(jnp.where(any_sel, rep, -1))
+    return jnp.stack(costs, 1), jnp.stack(reps, 1)

@@ -1,0 +1,155 @@
+"""Pallas TPU flash attention (causal GQA, optional sliding window).
+
+Tiling: grid (B, H, n_q_blocks, n_k_blocks); the last grid dim is sequential
+on TPU so the online-softmax state (m, l, acc) lives in VMEM scratch and
+persists across k blocks. Blocks are (block_q x head_dim) / (block_k x
+head_dim) VMEM tiles; MXU work is the two (block_q, head_dim) x (head_dim,
+block_k) / (block_q, block_k) x (block_k, head_dim) dots in fp32.
+
+Causal block skipping: k blocks strictly above the diagonal are skipped with
+pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, bq, D)
+    m_scr,  # (bq,) f32
+    l_scr,  # (bq,) f32
+    acc_scr,  # (bq, D) f32
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_k: int,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_offset + iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # block-level skip: fully-masked k blocks issue no compute
+    first_q = q_offset + iq * block_q
+    last_q = first_q + block_q - 1
+    first_k = ik * block_k
+    live = first_k < seq_k
+    if causal:
+        live &= first_k <= last_q
+    if window is not None:
+        live &= (ik * block_k + block_k - 1) > first_q - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = (k_pos[None, :] < seq_k) & jnp.ones((block_q, 1), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KH, Sk, D)
+    v: jax.Array,  # (B, KH, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pad_q, pad_k = (-Sq) % bq, (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, pad_q), (0, 0)])
+    if pad_k:
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, pad_k), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, pad_k), (0, 0)])
+    nq, nk = (Sq + pad_q) // bq, (Sk + pad_k) // bk
+
+    kernel = functools.partial(
+        _kernel,
+        scale=D**-0.5,
+        block_q=bq,
+        block_k=bk,
+        seq_q=Sq,
+        seq_k=Sk,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pl.MemorySpace.ANY if False else pltpu_scratch((bq,)),
+            pltpu_scratch((bq,)),
+            pltpu_scratch((bq, D)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return out
+
+
+def pltpu_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

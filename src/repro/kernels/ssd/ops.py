@@ -1,0 +1,76 @@
+"""Jit'd SSD wrapper: Pallas intra-chunk + lax.scan inter-chunk recurrence.
+
+Drop-in replacement for repro.models.ssm.ssd_scan (same signature subset)
+selected by RunConfig.use_pallas on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import ssd_intra_chunk
+
+MIN_LOG = -30.0
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = _on_cpu()
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    Sp = S + pad
+    nc = Sp // L
+
+    # (BH, nc, L, ...) layout for the kernel; groups expanded to heads
+    xk = x.transpose(0, 2, 1, 3).reshape(B_ * H, nc, L, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B_ * H, nc, L)
+    Bh = jnp.repeat(Bm, hpg, axis=2).transpose(0, 2, 1, 3).reshape(B_ * H, nc, L, N)
+    Ch = jnp.repeat(Cm, hpg, axis=2).transpose(0, 2, 1, 3).reshape(B_ * H, nc, L, N)
+    Ak = jnp.broadcast_to(A[None, :], (B_, H)).reshape(B_ * H, 1)
+
+    y_intra, sc, dec, cum = ssd_intra_chunk(
+        xk, dtk, Ak, Bh, Ch, interpret=interpret
+    )
+
+    # inter-chunk recurrence over nc (sequential, small state)
+    def step(h, inp):
+        sc_c, dec_c = inp  # (BH, N, P), (BH,)
+        h_new = h * dec_c[:, None, None] + sc_c
+        return h_new, h
+
+    h0 = jnp.zeros((B_ * H, N, P), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step, h0, (sc.transpose(1, 0, 2, 3), dec.transpose(1, 0))
+    )
+    h_in = h_in.transpose(1, 0, 2, 3)  # (BH, nc, N, P) state entering chunk
+
+    inter_decay = jnp.exp(jnp.maximum(cum, MIN_LOG))  # (BH, nc, L)
+    y_inter = jnp.einsum("bcln,bcnp,bcl->bclp", Ch, h_in, inter_decay)
+    y = (y_intra + y_inter).reshape(B_, H, Sp, P).transpose(0, 2, 1, 3)
+    if pad:
+        y = y[:, :S]
+    h_last = h_last.reshape(B_, H, N, P)
+    return y, h_last

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the SSD kernel: the naive per-step recurrence."""
+from repro.models.ssm import ssd_reference, ssd_scan  # noqa: F401

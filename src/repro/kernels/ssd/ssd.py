@@ -1,0 +1,103 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+Per grid cell (batch x head x chunk) the kernel computes, over one chunk of
+length L with head_dim P and state N (VMEM tiles):
+
+    y_intra = (tril(exp(cum_i - cum_j)) * (C B^T) * dt_j) X      (L, P)
+    sc      = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T            (N, P)
+    dec     = exp(cum_L)                                         (1, 1)
+
+The inter-chunk recurrence (a lax.scan over sc/dec) and the final
+y += C h_in exp(cum) term stay in ops.py — they are O(S N P / L) and
+bandwidth-bound, while the O(S L P + S L N) intra work lives here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MIN_LOG = -30.0
+
+
+def _kernel(
+    x_ref,  # (1, 1, L, P)
+    dt_ref,  # (1, 1, L)
+    a_ref,  # (1, 1)
+    b_ref,  # (1, 1, L, N)
+    c_ref,  # (1, 1, L, N)
+    y_ref,  # (1, 1, L, P)
+    sc_ref,  # (1, 1, N, P)
+    dec_ref,  # (1, 1)
+    cum_ref,  # (1, 1, L)
+    *,
+    L: int,
+):
+    x = x_ref[0, 0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (L,)
+    A = a_ref[0, 0].astype(jnp.float32)  # scalar (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (L, N)
+
+    la = dt * A  # per-step log decay, negative
+    cum = jnp.cumsum(la)  # (L,)
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L): C_i . B_j
+    dmat = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.iota(jnp.int32, L)[:, None] >= jax.lax.iota(jnp.int32, L)[None, :]
+    )
+    m = jnp.where(tri, jnp.exp(jnp.maximum(dmat, MIN_LOG)), 0.0)
+    m = m * cb * dt[None, :]
+    y_ref[0, 0] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    tail = jnp.exp(jnp.maximum(cum[L - 1] - cum, MIN_LOG)) * dt  # (L,)
+    sc_ref[0, 0] = jax.lax.dot_general(
+        Bm * tail[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(sc_ref.dtype)  # (N, P)
+    dec_ref[0, 0] = jnp.exp(jnp.maximum(cum[L - 1], MIN_LOG))
+    cum_ref[0, 0] = cum.astype(cum_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jax.Array,  # (BH, nc, L, P)
+    dt: jax.Array,  # (BH, nc, L)
+    A: jax.Array,  # (BH, 1) per-(batch*head) decay rate
+    Bm: jax.Array,  # (BH, nc, L, N)
+    Cm: jax.Array,  # (BH, nc, L, N)
+    *,
+    interpret: bool = False,
+):
+    BH, nc, L, P = x.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, c)),
+            pl.BlockSpec((1, 1, L), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nc, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

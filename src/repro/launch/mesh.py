@@ -1,0 +1,27 @@
+"""Production meshes. Functions, not module constants — importing this must
+never touch jax device state (the dry-run sets device-count flags first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e-class); 2 pods for the multi-pod dry-run.
+
+    Axes: "pod" (outer data-parallel over DCI), "data" (DP within pod),
+    "model" (TP/EP within pod).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+# hardware constants (roofline) — TPU v5e-class target
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW_PER_LINK = 50e9  # B/s per link (~4 usable links/chip in a 2-D torus)
+DCI_BW = 25e9  # B/s per chip across pods (pod axis)

@@ -1,0 +1,222 @@
+"""Input/state ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+No device allocation happens here: everything is eval_shape'd and paired
+with shape-aware NamedShardings (repro/dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import (
+    CACHE_RULES,
+    DEFAULT_RULES,
+    spec_for_shape,
+    tree_shardings,
+    zero1_shardings,
+)
+from ..models.config import ArchConfig, RunConfig, ShapeConfig
+from ..models.model import abstract_init, cache_axes, init_caches
+from ..train.optim import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def make_run_config(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> RunConfig:
+    """Per-cell execution config: remat for training, int8 KV when a bf16
+    cache would not fit HBM, chunked attention sized to the sequence."""
+    kv_dtype = "bfloat16"
+    if shape.kind == "decode":
+        # estimate bf16 KV bytes/chip: batch over data axes, seq over model
+        n_data = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_data *= mesh.shape[a]
+        n_model = mesh.shape.get("model", 1)
+        b_local = max(1, shape.global_batch // n_data)
+        if cfg.mla:
+            per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        else:
+            per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+        layers_full = sum(
+            c for k, c in cfg.layout if not k.endswith("_w") and k != "ssd"
+        )
+        gb = b_local * (shape.seq_len / n_model) * per_tok * 2 * layers_full / 1e9
+        if gb > 11.0:
+            kv_dtype = "int8"
+    return RunConfig(
+        remat="block" if shape.kind == "train" else "none",
+        attn_chunk_q=min(512, shape.seq_len),
+        attn_chunk_k=min(1024, shape.seq_len),
+        kv_cache_dtype=kv_dtype,
+        zero1=True,
+    )
+
+
+@dataclass
+class CellSpecs:
+    kind: str  # train | prefill | decode
+    args: tuple  # ShapeDtypeStruct pytrees, in call order
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+    run: RunConfig
+    meta: dict
+
+
+def _batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, run: RunConfig,
+                 decode: bool):
+    B = shape.global_batch
+    S = 1 if decode else shape.seq_len
+    specs: dict[str, Any] = {}
+    shard: dict[str, Any] = {}
+    if cfg.embed_input == "tokens":
+        specs["tokens"] = SDS((B, S), jnp.int32)
+        shard["tokens"] = NamedSharding(
+            mesh, spec_for_shape(("batch", "seq"), (B, S), mesh)
+        )
+    else:
+        specs["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        shard["frames"] = NamedSharding(
+            mesh, spec_for_shape(("batch", "seq", "embed"), (B, S, cfg.d_model), mesh)
+        )
+    if decode:
+        specs["pos"] = SDS((), jnp.int32)
+        shard["pos"] = NamedSharding(mesh, P())
+    else:
+        specs["labels"] = SDS((B, S), jnp.int32)
+        shard["labels"] = NamedSharding(
+            mesh, spec_for_shape(("batch", "seq"), (B, S), mesh)
+        )
+    return specs, shard
+
+
+def train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               run_overrides: dict | None = None) -> CellSpecs:
+    run = make_run_config(cfg, shape, mesh)
+    if run_overrides:
+        run = dataclasses.replace(run, **run_overrides)
+    pshapes, pspecs = abstract_init(cfg, run)
+    state_shapes = TrainState(
+        step=SDS((), jnp.int32),
+        params=pshapes,
+        m=pshapes,
+        v=pshapes,
+    )
+    psh = (
+        zero1_shardings(pspecs, pshapes, mesh)
+        if run.zero1
+        else tree_shardings(pspecs, pshapes, mesh)
+    )
+    state_sh = TrainState(
+        step=NamedSharding(mesh, P()), params=psh, m=psh, v=psh
+    )
+    bspec, bshard = _batch_specs(cfg, shape, mesh, run, decode=False)
+    metrics_sh = None  # let XLA pick
+    return CellSpecs(
+        kind="train",
+        args=(state_shapes, bspec),
+        in_shardings=(state_sh, bshard),
+        out_shardings=(state_sh, metrics_sh),
+        donate=(0,),
+        run=run,
+        meta={"tokens": shape.global_batch * shape.seq_len},
+    )
+
+
+def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                 run_overrides: dict | None = None) -> CellSpecs:
+    run = make_run_config(cfg, shape, mesh)
+    if run_overrides:
+        run = dataclasses.replace(run, **run_overrides)
+    pshapes, pspecs = abstract_init(cfg, run)
+    psh = tree_shardings(pspecs, pshapes, mesh)
+    bspec, bshard = _batch_specs(cfg, shape, mesh, run, decode=False)
+    bspec.pop("labels", None)
+    bshard.pop("labels", None)
+    # out: (last-token logits, caches)
+    cshape = jax.eval_shape(
+        lambda: init_caches(cfg, run, shape.global_batch, shape.seq_len)
+    )
+    csh = tree_shardings(cache_axes(cfg, run), cshape, mesh, CACHE_RULES)
+    return CellSpecs(
+        kind="prefill",
+        args=(pshapes, bspec),
+        in_shardings=(psh, bshard),
+        out_shardings=(None, csh),
+        donate=(),
+        run=run,
+        meta={"tokens": shape.global_batch * shape.seq_len},
+    )
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                run_overrides: dict | None = None) -> CellSpecs:
+    run = make_run_config(cfg, shape, mesh)
+    if run_overrides:
+        run = dataclasses.replace(run, **run_overrides)
+    pshapes, pspecs = abstract_init(cfg, run)
+    psh = tree_shardings(pspecs, pshapes, mesh)
+    cshape = jax.eval_shape(
+        lambda: init_caches(cfg, run, shape.global_batch, shape.seq_len)
+    )
+    csh = tree_shardings(cache_axes(cfg, run), cshape, mesh, CACHE_RULES)
+    bspec, bshard = _batch_specs(cfg, shape, mesh, run, decode=True)
+    return CellSpecs(
+        kind="decode",
+        args=(pshapes, cshape, bspec),
+        in_shardings=(psh, csh, bshard),
+        out_shardings=(None, csh),
+        donate=(1,),
+        run=run,
+        meta={"tokens": shape.global_batch},
+    )
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               run_overrides: dict | None = None) -> CellSpecs:
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, run_overrides)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh, run_overrides)
+    return decode_cell(cfg, shape, mesh, run_overrides)
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs accounting (roofline's "useful compute")
+# ---------------------------------------------------------------------------
+def param_counts(cfg: ArchConfig, run: RunConfig) -> dict:
+    import math
+
+    pshapes, _ = abstract_init(cfg, run)
+    total = sum(math.prod(int(d) for d in s.shape) for s in jax.tree.leaves(pshapes))
+    active = total
+    if cfg.moe:
+        m = cfg.moe
+        for gi, (kind, count) in enumerate(cfg.layout):
+            if not kind.endswith("_moe"):
+                continue
+            g = pshapes[f"g{gi}"]["ffn"]
+            routed = sum(
+                math.prod(int(d) for d in g[k].shape) for k in ("wi", "wg", "wo")
+            )
+            active -= routed
+            active += int(routed * m.top_k / m.n_experts)
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, run: RunConfig) -> float:
+    """6 N_active D for training, 2 N_active D for inference forward."""
+    counts = param_counts(cfg, run)
+    n = counts["active"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token per sequence

@@ -1,0 +1,32 @@
+"""Model substrate: layers, attention (GQA/MLA), SSD, MoE, blocks, LM."""
+from .config import SHAPES, ArchConfig, MLAConfig, MoEConfig, RunConfig, ShapeConfig, SSMConfig
+from .layers import count_params
+from .model import (
+    abstract_init,
+    decode_step,
+    forward,
+    init_caches,
+    loss_fn,
+    model_init,
+    padded_vocab,
+    prefill,
+)
+
+__all__ = [
+    "abstract_init",
+    "SHAPES",
+    "ArchConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "RunConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "count_params",
+    "decode_step",
+    "forward",
+    "init_caches",
+    "loss_fn",
+    "model_init",
+    "padded_vocab",
+    "prefill",
+]

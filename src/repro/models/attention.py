@@ -1,0 +1,601 @@
+"""Attention: GQA (full/sliding-window) + DeepSeek-V2 MLA, train/prefill/decode.
+
+The training/prefill path uses a chunked online-softmax attention written in
+pure jnp (lax.scan over KV blocks) so that the 32k-prefill dry-run never
+materializes S x S score matrices; on TPU the Pallas flash kernel
+(repro/kernels/flash_attention) replaces it via RunConfig.use_pallas.
+
+Decode attends a single query against a contiguous KV cache (bf16 or int8
+with per-token-per-head scales). MLA caches the compressed latent (c_kv,
+k_rope) only, and decodes with the absorbed-matmul formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MLAConfig, RunConfig
+from .layers import Params, Specs, dense_apply, dense_init, norm_apply, norm_init
+from .rope import apply_mrope, apply_rope
+from ..shardctx import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (jnp flash, custom_vjp backward)
+#
+# The forward scans KV blocks with an online softmax; the BACKWARD is a
+# hand-written flash backward (recompute p per block pair from the saved
+# logsumexp) — without it, the VJP of the forward scans stacks every
+# (cq x ck) probability block as a residual, which at 32k context is
+# hundreds of GB per chip (found by the dry-run memory roofline).
+# ---------------------------------------------------------------------------
+def _flash_fwd_impl(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KH, D)
+    v: jax.Array,  # (B, Sk, KH, Dv)
+    causal: bool,
+    window: int | None,
+    chunk_q: int,
+    chunk_k: int,
+    q_offset: int,
+    stream_bf16: bool = False,
+):
+    # stream_bf16: keep q/k/v/p tiles in bf16 on the HBM<->compute path and
+    # accumulate in f32 via preferred_element_type — the numerics the Pallas
+    # kernel (and any MXU matmul) uses; halves the attention HBM traffic.
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # may differ from D (MLA: qk 192, v 128)
+    G = H // KH
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    # pad ragged lengths up to chunk multiples; padded KV is masked off and
+    # padded Q rows are sliced off at the end
+    pad_q = (-Sq) % cq
+    pad_k = (-Sk) % ck
+    if pad_q:
+        q = jnp.pad(q, [(0, 0), (0, pad_q), (0, 0), (0, 0)])
+    if pad_k:
+        k = jnp.pad(k, [(0, 0), (0, pad_k), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad_k), (0, 0), (0, 0)])
+    kv_len = Sk
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    nq, nk = Sq_p // cq, Sk_p // ck
+    scale = D ** -0.5
+
+    st = jnp.bfloat16 if stream_bf16 else jnp.float32
+    qc = q.reshape(B, nq, cq, KH, G, D).astype(st)
+    kc = k.reshape(B, nk, ck, KH, D).astype(st)
+    vc = v.reshape(B, nk, ck, KH, Dv).astype(st)
+
+    # Sliding-window: only the KV blocks overlapping [q_pos - window, q_pos]
+    # are live; scan a static-length relative range instead of all nk blocks
+    # (jnp analogue of the Pallas kernel's block skipping — a 1k window over
+    # 32k context otherwise wastes 16x bytes and flops).
+    if window is not None and causal:
+        n_live = min(nk, (cq + window + ck - 1) // ck + 1)
+    else:
+        n_live = nk
+
+    def q_block(iq, q_i):  # q_i: (B, cq, KH, G, D)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+        if n_live < nk:
+            j0 = jnp.clip((q_offset + iq * cq - (window or 0)) // ck, 0,
+                          nk - n_live)
+        else:
+            j0 = jnp.int32(0)
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            ik = j0 + jk
+            k_i = jax.lax.dynamic_index_in_dim(kc, ik, 1, keepdims=False)
+            v_i = jax.lax.dynamic_index_in_dim(vc, ik, 1, keepdims=False)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i, k_i,
+                preferred_element_type=jnp.float32,
+            ) * scale  # (B,KH,G,cq,ck) f32
+            k_pos = ik * ck + jnp.arange(ck)
+            mask = jnp.broadcast_to(k_pos[None, :] < kv_len, (cq, ck))
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(st), v_i,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_live))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KH,G,cq,Dv)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,KH,G,cq)
+        return out.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    outs, lses = jax.lax.map(lambda i: q_block(i, qc[:, i]), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, H, Dv)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, Sq_p, KH, G)
+    if pad_q:
+        out = out[:, :Sq]
+        lse = lse[:, :Sq]
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd_impl(
+    q, k, v, lse, out, dout,
+    causal, window, chunk_q, chunk_k, q_offset, stream_bf16=False,
+):
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    pad_q, pad_k = (-Sq) % cq, (-Sk) % ck
+    if pad_q:
+        padq = [(0, 0), (0, pad_q), (0, 0), (0, 0)]
+        q = jnp.pad(q, padq)
+        out = jnp.pad(out, padq[:2] + [(0, 0), (0, 0)])
+        dout = jnp.pad(dout, padq[:2] + [(0, 0), (0, 0)])
+        lse = jnp.pad(lse, [(0, 0), (0, pad_q), (0, 0), (0, 0)])
+    if pad_k:
+        padk = [(0, 0), (0, pad_k), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, padk), jnp.pad(v, padk)
+    kv_len = Sk
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    nq, nk = Sq_p // cq, Sk_p // ck
+    scale = D ** -0.5
+
+    st = jnp.bfloat16 if stream_bf16 else jnp.float32
+    qc = q.reshape(B, nq, cq, KH, G, D).astype(st)
+    kc = k.reshape(B, nk, ck, KH, D).astype(st)
+    vc = v.reshape(B, nk, ck, KH, Dv).astype(st)
+    doc = dout.reshape(B, nq, cq, KH, G, Dv).astype(st)
+    oc = out.reshape(B, nq, cq, KH, G, Dv).astype(st)
+    lsec = lse.reshape(B, nq, cq, KH, G)
+    # delta_i = rowsum(dout * out)
+    delta = jnp.sum(
+        doc.astype(jnp.float32) * oc.astype(jnp.float32), axis=-1
+    )  # (B,nq,cq,KH,G)
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry  # (B,nk,ck,KH,D), (B,nk,ck,KH,Dv)
+        q_i = qc[:, iq]
+        do_i = doc[:, iq]
+        lse_i = lsec[:, iq].transpose(0, 2, 3, 1)  # (B,KH,G,cq)
+        dl_i = delta[:, iq].transpose(0, 2, 3, 1)  # (B,KH,G,cq)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(dq_i, ik):
+            k_j, v_j = kc[:, ik], vc[:, ik]
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i, k_j,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            k_pos = ik * ck + jnp.arange(ck)
+            mask = jnp.broadcast_to(k_pos[None, :] < kv_len, (cq, ck))
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            p = jnp.exp(jnp.minimum(s - lse_i[..., None], 30.0))
+            p = jnp.where(mask, p, 0.0)  # (B,KH,G,cq,ck)
+            dv_j = jnp.einsum(
+                "bhgqk,bqhgd->bkhd", p.astype(st), do_i,
+                preferred_element_type=jnp.float32,
+            )
+            dp = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", do_i, v_j,
+                preferred_element_type=jnp.float32,
+            )
+            ds = (p * (dp - dl_i[..., None]) * scale).astype(st)
+            dq_i = dq_i + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", ds, k_j,
+                preferred_element_type=jnp.float32,
+            )
+            dk_j = jnp.einsum(
+                "bhgqk,bqhgd->bkhd", ds, q_i,
+                preferred_element_type=jnp.float32,
+            )
+            return dq_i, (dk_j, dv_j, ik)
+
+        dq0 = jnp.zeros((B, cq, KH, G, D), jnp.float32)
+        dq_i, (dks, dvs, iks) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+        # scatter dk/dv chunk grads back (scan order == chunk order)
+        dk_acc = dk_acc + dks.transpose(1, 0, 2, 3, 4)
+        dv_acc = dv_acc + dvs.transpose(1, 0, 2, 3, 4)
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((B, nk, ck, KH, D), jnp.float32)
+    dv0 = jnp.zeros((B, nk, ck, KH, Dv), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, H, D)
+    dk = dk.reshape(B, Sk_p, KH, D)
+    dv = dv.reshape(B, Sk_p, KH, Dv)
+    if pad_q:
+        dq = dq[:, :Sq]
+    if pad_k:
+        dk, dv = dk[:, :Sk], dv[:, :Sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, chunk_q, chunk_k, q_offset, stream_bf16):
+    out, _ = _flash_fwd_impl(
+        q, k, v, causal, window, chunk_q, chunk_k, q_offset, stream_bf16
+    )
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, chunk_q, chunk_k, q_offset,
+                    stream_bf16):
+    out, lse = _flash_fwd_impl(
+        q, k, v, causal, window, chunk_q, chunk_k, q_offset, stream_bf16
+    )
+    return out, (q, k, v, lse, out)
+
+
+def _flash_bwd_rule(causal, window, chunk_q, chunk_k, q_offset, stream_bf16,
+                    res, dout):
+    q, k, v, lse, out = res
+    return _flash_bwd_impl(
+        q, k, v, lse, out, dout, causal, window, chunk_q, chunk_k, q_offset,
+        stream_bf16,
+    )
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KH, D)
+    v: jax.Array,  # (B, Sk, KH, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    q_offset: int = 0,
+    stream_bf16: bool = False,
+) -> jax.Array:
+    return _flash(q, k, v, causal, window, chunk_q, chunk_k, q_offset,
+                  stream_bf16)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, S, KH, D)
+    v: jax.Array,  # (B, S, KH, D)
+    valid: jax.Array,  # (S,) or (B, S) bool
+    *,
+    window_ring: bool = False,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qf = q.reshape(B, KH, G, D).astype(jnp.float32) * D**-0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32))
+    if valid.ndim == 1:
+        valid = valid[None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache helpers (per-token-per-head scales)
+# ---------------------------------------------------------------------------
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, S, KH, D) -> int8 values + (B, S, KH, 1) f32 scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    qv = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return qv, scale
+
+
+def dequantize_kv(qv: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (qv.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg: ArchConfig) -> tuple[Params, Specs]:
+    d, H, KH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pq, sq = dense_init(ks[0], d, H * Dh, "embed", "heads", bias=cfg.qkv_bias)
+    pk, sk = dense_init(ks[1], d, KH * Dh, "embed", "kv_heads", bias=cfg.qkv_bias)
+    pv, sv = dense_init(ks[2], d, KH * Dh, "embed", "kv_heads", bias=cfg.qkv_bias)
+    po, so = dense_init(ks[3], H * Dh, d, "heads", "embed")
+    return (
+        {"wq": pq, "wk": pk, "wv": pv, "wo": po},
+        {"wq": sq, "wk": sk, "wv": sv, "wo": so},
+    )
+
+
+def _positions_3d(positions: jax.Array) -> jax.Array:
+    """Text-only stand-in for M-RoPE ids: (B,S) -> (B,S,3) equal sections."""
+    return jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+
+
+def _rope_q_k(q, k, positions, cfg: ArchConfig):
+    if cfg.pos == "rope":
+        return (
+            apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta),
+        )
+    if cfg.pos == "mrope":
+        p3 = _positions_3d(positions)
+        return (
+            apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections),
+            apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections),
+        )
+    return q, k  # sinusoidal/none handled at the embedding
+
+
+def gqa_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg: ArchConfig,
+    run: RunConfig,
+    positions: jax.Array,  # (B, S)
+    *,
+    window: int | None = None,
+    return_kv: bool = False,
+):
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(B, S, H, Dh)
+    k = dense_apply(p["wk"], x).reshape(B, S, KH, Dh)
+    v = dense_apply(p["wv"], x).reshape(B, S, KH, Dh)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    q, k = _rope_q_k(q, k, positions, cfg)
+    out = chunked_attention(
+        q,
+        k,
+        v,
+        causal=True,
+        window=window,
+        chunk_q=run.attn_chunk_q,
+        chunk_k=run.attn_chunk_k,
+        stream_bf16=run.attn_stream_bf16,
+    )
+    out = dense_apply(p["wo"], out.reshape(B, S, H * Dh))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_init_cache(cfg: ArchConfig, run: RunConfig, batch: int, max_len: int, window: int | None):
+    KH, Dh = cfg.n_kv_heads, cfg.head_dim
+    S = min(max_len, window) if window else max_len
+    dt = jnp.int8 if run.kv_cache_dtype == "int8" else jnp.dtype(run.kv_cache_dtype)
+    cache = {
+        "k": jnp.zeros((batch, S, KH, Dh), dt),
+        "v": jnp.zeros((batch, S, KH, Dh), dt),
+    }
+    if run.kv_cache_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((batch, S, KH, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, S, KH, 1), jnp.float32)
+    return cache
+
+
+def gqa_decode(
+    p: Params,
+    cache: dict,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ArchConfig,
+    run: RunConfig,
+    pos: jax.Array,  # scalar int32: tokens already in cache
+    *,
+    window: int | None = None,
+):
+    B = x.shape[0]
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S = cache["k"].shape[1]
+    q = dense_apply(p["wq"], x).reshape(B, 1, H, Dh)
+    k = dense_apply(p["wk"], x).reshape(B, 1, KH, Dh)
+    v = dense_apply(p["wv"], x).reshape(B, 1, KH, Dh)
+    q, k = _rope_q_k(q, k, jnp.full((B, 1), pos, jnp.int32), cfg)
+    slot = jnp.mod(pos, S) if window else pos
+    if run.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0, 0)
+        )
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0, 0)
+        )
+        kk = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+        vv = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+        kk, vv = cache["k"], cache["v"]
+    idx = jnp.arange(S)
+    if window:
+        # ring cache: every slot is valid once the cache has wrapped. RoPE
+        # used absolute positions, so slot order does not matter for scores.
+        valid = (idx <= slot) | (pos >= S)
+    else:
+        valid = idx <= pos
+    out = decode_attention(q, kk, vv, valid)
+    out = dense_apply(p["wo"], out.reshape(B, 1, H * Dh))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ArchConfig) -> tuple[Params, Specs]:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    p_dq, s_dq = dense_init(ks[0], d, m.q_lora_rank, "embed", "q_lora")
+    p_uq, s_uq = dense_init(
+        ks[1], m.q_lora_rank, H * (m.qk_nope_head_dim + m.qk_rope_head_dim),
+        "q_lora", "heads",
+    )
+    p_dkv, s_dkv = dense_init(ks[2], d, m.kv_lora_rank, "embed", "kv_lora")
+    p_ukv, s_ukv = dense_init(
+        ks[3], m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim),
+        "kv_lora", "heads",
+    )
+    p_kr, s_kr = dense_init(ks[4], d, m.qk_rope_head_dim, "embed", "qk_rope")
+    p_o, s_o = dense_init(ks[5], H * m.v_head_dim, d, "heads", "embed")
+    nq, nsq = norm_init(m.q_lora_rank)
+    nkv, nskv = norm_init(m.kv_lora_rank)
+    return (
+        {"wdq": p_dq, "wuq": p_uq, "wdkv": p_dkv, "wukv": p_ukv,
+         "wkr": p_kr, "wo": p_o, "qnorm": nq, "kvnorm": nkv},
+        {"wdq": s_dq, "wuq": s_uq, "wdkv": s_dkv, "wukv": s_ukv,
+         "wkr": s_kr, "wo": s_o, "qnorm": nsq, "kvnorm": nskv},
+    )
+
+
+def _mla_qkv(p, x, cfg: ArchConfig, positions):
+    """Full (naive) MLA q/k/v for train/prefill."""
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = norm_apply(p["qnorm"], dense_apply(p["wdq"], x))
+    q = dense_apply(p["wuq"], cq).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    ckv = norm_apply(p["kvnorm"], dense_apply(p["wdkv"], x))
+    kv = dense_apply(p["wukv"], ckv).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope = dense_apply(p["wkr"], x).reshape(B, S, 1, m.qk_rope_head_dim)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q_full, k_full, v, ckv, k_rope[:, :, 0]
+
+
+def mla_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    run: RunConfig,
+    positions: jax.Array,
+    *,
+    return_kv: bool = False,
+):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    q, k, v, ckv, krope = _mla_qkv(p, x, cfg, positions)
+    out = chunked_attention(
+        q, k, v,
+        causal=True,
+        chunk_q=run.attn_chunk_q,
+        chunk_k=run.attn_chunk_k,
+        stream_bf16=run.attn_stream_bf16,
+    )
+    out = dense_apply(p["wo"], out.reshape(B, S, cfg.n_heads * m.v_head_dim))
+    if return_kv:
+        return out, (ckv, krope)
+    return out
+
+
+def mla_init_cache(cfg: ArchConfig, run: RunConfig, batch: int, max_len: int):
+    m: MLAConfig = cfg.mla
+    dt = (
+        jnp.bfloat16
+        if run.kv_cache_dtype == "int8"
+        else jnp.dtype(run.kv_cache_dtype)
+    )
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+    }
+
+
+def mla_decode(
+    p: Params,
+    cache: dict,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ArchConfig,
+    run: RunConfig,
+    pos: jax.Array,
+):
+    """Absorbed-matmul MLA decode: attend in the 512-d latent space.
+
+    q_eff = q_nope @ W_uk  (absorb key up-proj);  scores = q_eff . c_kv
+    out_lat = attn @ c_kv; out = (out_lat @ W_uv) @ W_o  (absorb value up-proj)
+    """
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    cq = norm_apply(p["qnorm"], dense_apply(p["wdq"], x))
+    q = dense_apply(p["wuq"], cq).reshape(
+        B, 1, H, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, jnp.full((B, 1), pos, jnp.int32), cfg.rope_theta)
+    ckv_new = norm_apply(p["kvnorm"], dense_apply(p["wdkv"], x))  # (B,1,Lkv)
+    krope_new = apply_rope(
+        dense_apply(p["wkr"], x).reshape(B, 1, 1, m.qk_rope_head_dim),
+        jnp.full((B, 1), pos, jnp.int32),
+        cfg.rope_theta,
+    ).reshape(B, 1, m.qk_rope_head_dim)
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    cache["krope"] = jax.lax.dynamic_update_slice(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), (0, pos, 0)
+    )
+    S = cache["ckv"].shape[1]
+    # absorb W_uk: (Lkv, H, nope)
+    wukv = p["wukv"]["w"].reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim
+    )
+    w_uk = wukv[:, :, : m.qk_nope_head_dim]
+    w_uv = wukv[:, :, m.qk_nope_head_dim :]
+    q_eff = jnp.einsum(  # (B,H,Lkv)
+        "bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32), w_uk.astype(jnp.float32)
+    )
+    ckv_f = cache["ckv"].astype(jnp.float32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bhl,bsl->bhs", q_eff, ckv_f)
+    s += jnp.einsum(
+        "bhr,bsr->bhs",
+        q_rope[:, 0].astype(jnp.float32),
+        cache["krope"].astype(jnp.float32),
+    )
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s * scale, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhs,bsl->bhl", prob, ckv_f)  # (B,H,Lkv)
+    out = jnp.einsum("bhl,lhd->bhd", out_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return dense_apply(p["wo"], out), cache

@@ -1,0 +1,253 @@
+"""Decoder blocks: attention/MLA/SSD/Hymba-hybrid x dense/MoE FFN.
+
+Block kinds (ArchConfig.layout):
+    attn_dense  attn_moe  mla_dense  mla_moe  ssd  hymba_g  hymba_w
+
+Every kind implements init / apply (train + prefill) / init_cache / decode
+with a common signature so the model can lax.scan over homogeneous groups.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    gqa_apply,
+    gqa_decode,
+    gqa_init,
+    gqa_init_cache,
+    mla_apply,
+    mla_decode,
+    mla_init,
+    mla_init_cache,
+)
+from .config import ArchConfig, RunConfig
+from .layers import (
+    Params,
+    Specs,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+from .moe import moe_apply_dense, moe_init
+from .ssm import (
+    ssd_block_apply,
+    ssd_block_decode,
+    ssd_init,
+    ssd_init_cache,
+)
+
+
+def _window(kind: str, cfg: ArchConfig) -> int | None:
+    return cfg.window if kind.endswith("_w") else None
+
+
+def _moe_ffn(pf, xn, cfg: ArchConfig, run: RunConfig):
+    """Dense (GSPMD) or explicit expert-parallel (shard_map all_to_all)."""
+    if run.moe_impl == "ep":
+        from ..dist.ep import moe_apply_ep
+        from ..shardctx import _CTX
+
+        mesh = _CTX["mesh"]
+        if mesh is not None and cfg.moe.n_experts % mesh.shape["model"] == 0:
+            data_axes = tuple(
+                a for a in ("pod", "data") if a in mesh.axis_names
+            )
+            return moe_apply_ep(pf, xn, cfg, mesh, data_axes=data_axes)
+    return moe_apply_dense(pf, xn, cfg)
+
+
+# ---------------------------------------------------------------- init
+def block_init(kind: str, key, cfg: ArchConfig) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    sp: Specs = {}
+    p["norm1"], sp["norm1"] = norm_init(cfg.d_model, cfg.norm)
+    if kind in ("attn_dense", "attn_moe"):
+        p["attn"], sp["attn"] = gqa_init(ks[0], cfg)
+    elif kind in ("mla_dense", "mla_moe"):
+        p["attn"], sp["attn"] = mla_init(ks[0], cfg)
+    elif kind == "ssd":
+        p["ssd"], sp["ssd"] = ssd_init(ks[0], cfg)
+        return p, sp  # mamba2 block has no FFN sublayer
+    elif kind in ("hymba_g", "hymba_w"):
+        p["attn"], sp["attn"] = gqa_init(ks[0], cfg)
+        p["ssd"], sp["ssd"] = ssd_init(ks[3], cfg)
+        p["bnorm_a"], sp["bnorm_a"] = norm_init(cfg.d_model)
+        p["bnorm_s"], sp["bnorm_s"] = norm_init(cfg.d_model)
+    else:
+        raise ValueError(kind)
+    p["norm2"], sp["norm2"] = norm_init(cfg.d_model, cfg.norm)
+    if kind.endswith("_moe"):
+        p["ffn"], sp["ffn"] = moe_init(ks[1], cfg)
+    else:
+        d_ff = cfg.dense_d_ff if (cfg.moe and cfg.dense_d_ff) else cfg.d_ff
+        p["ffn"], sp["ffn"] = mlp_init(ks[1], cfg, d_ff)
+    return p, sp
+
+
+# ---------------------------------------------------------------- train / prefill
+def _mixer_apply(kind, p, xn, cfg, run, positions, collect_cache, cache_len=None):
+    """The token-mixing sublayer. Returns (out, cache | None)."""
+    if kind in ("attn_dense", "attn_moe"):
+        if collect_cache:
+            out, (k, v) = gqa_apply(p["attn"], xn, cfg, run, positions, return_kv=True)
+            return out, _kv_to_cache(k, v, cfg, run, None, cache_len)
+        return gqa_apply(p["attn"], xn, cfg, run, positions), None
+    if kind in ("mla_dense", "mla_moe"):
+        if collect_cache:
+            out, (ckv, krope) = mla_apply(
+                p["attn"], xn, cfg, run, positions, return_kv=True
+            )
+            if cache_len is not None and cache_len > ckv.shape[1]:
+                grow = cache_len - ckv.shape[1]
+                ckv = jnp.pad(ckv, [(0, 0), (0, grow), (0, 0)])
+                krope = jnp.pad(krope, [(0, 0), (0, grow), (0, 0)])
+            cdt = (
+                jnp.bfloat16
+                if run.kv_cache_dtype == "int8"
+                else jnp.dtype(run.kv_cache_dtype)
+            )
+            return out, {"ckv": ckv.astype(cdt), "krope": krope.astype(cdt)}
+        return mla_apply(p["attn"], xn, cfg, run, positions), None
+    if kind == "ssd":
+        if collect_cache:
+            out, st = ssd_block_apply(
+                p["ssd"], xn, cfg, return_state=True,
+                stream_bf16=run.ssd_stream_bf16, chunk=run.ssd_chunk,
+            )
+            return out, st
+        return ssd_block_apply(
+            p["ssd"], xn, cfg, stream_bf16=run.ssd_stream_bf16,
+            chunk=run.ssd_chunk,
+        ), None
+    if kind in ("hymba_g", "hymba_w"):
+        w = _window(kind, cfg)
+        if collect_cache:
+            a, (k, v) = gqa_apply(
+                p["attn"], xn, cfg, run, positions, window=w, return_kv=True
+            )
+            s, st = ssd_block_apply(
+                p["ssd"], xn, cfg, return_state=True,
+                stream_bf16=run.ssd_stream_bf16, chunk=run.ssd_chunk,
+            )
+            cache = {"attn": _kv_to_cache(k, v, cfg, run, w, cache_len), "ssm": st}
+        else:
+            a = gqa_apply(p["attn"], xn, cfg, run, positions, window=w)
+            s = ssd_block_apply(
+                p["ssd"], xn, cfg, stream_bf16=run.ssd_stream_bf16,
+                chunk=run.ssd_chunk,
+            )
+            cache = None
+        out = 0.5 * (norm_apply(p["bnorm_a"], a) + norm_apply(p["bnorm_s"], s))
+        return out, cache
+    raise ValueError(kind)
+
+
+def _kv_to_cache(k, v, cfg: ArchConfig, run: RunConfig, window: int | None, cache_len=None):
+    """Full-sequence K/V -> decode cache layout (ring-truncated for SWA,
+    zero-padded to ``cache_len`` capacity for cache growth during decode)."""
+    if window:
+        S = k.shape[1]
+        if S >= window:
+            # keep the last `window` tokens; position p lands at ring slot
+            # p % window (the layout gqa_decode continues to write)
+            k, v = k[:, -window:], v[:, -window:]
+            shift = S % window
+            if shift:
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+        else:
+            pad = [(0, 0), (0, window - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    elif cache_len is not None and cache_len > k.shape[1]:
+        pad = [(0, 0), (0, cache_len - k.shape[1]), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    if run.kv_cache_dtype == "int8":
+        from .attention import quantize_kv
+
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    dt = jnp.dtype(run.kv_cache_dtype)
+    return {"k": k.astype(dt), "v": v.astype(dt)}
+
+
+def block_apply(
+    kind: str,
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    run: RunConfig,
+    positions: jax.Array,
+    collect_cache: bool = False,
+    cache_len: int | None = None,
+):
+    """Returns (x_out, aux_loss, cache|None)."""
+    mix, cache = _mixer_apply(
+        kind, p,
+        norm_apply(p["norm1"], x, stats_only_f32=run.norm_stats_only_f32),
+        cfg, run, positions, collect_cache, cache_len,
+    )
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssd":
+        return x, aux, cache
+    xn = norm_apply(p["norm2"], x, stats_only_f32=run.norm_stats_only_f32)
+    if kind.endswith("_moe"):
+        y, aux = _moe_ffn(p["ffn"], xn, cfg, run)
+    else:
+        y = mlp_apply(p["ffn"], xn, cfg.mlp)
+    return x + y, aux, cache
+
+
+# ---------------------------------------------------------------- decode
+def block_init_cache(kind: str, cfg: ArchConfig, run: RunConfig, batch: int, max_len: int):
+    if kind in ("attn_dense", "attn_moe"):
+        return gqa_init_cache(cfg, run, batch, max_len, None)
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_init_cache(cfg, run, batch, max_len)
+    if kind == "ssd":
+        return ssd_init_cache(cfg, batch)
+    if kind in ("hymba_g", "hymba_w"):
+        return {
+            "attn": gqa_init_cache(cfg, run, batch, max_len, _window(kind, cfg)),
+            "ssm": ssd_init_cache(cfg, batch),
+        }
+    raise ValueError(kind)
+
+
+def block_decode(
+    kind: str,
+    p: Params,
+    cache,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ArchConfig,
+    run: RunConfig,
+    pos: jax.Array,
+):
+    """Returns (x_out, new_cache)."""
+    xn = norm_apply(p["norm1"], x)
+    if kind in ("attn_dense", "attn_moe"):
+        mix, cache = gqa_decode(p["attn"], cache, xn, cfg, run, pos)
+    elif kind in ("mla_dense", "mla_moe"):
+        mix, cache = mla_decode(p["attn"], cache, xn, cfg, run, pos)
+    elif kind == "ssd":
+        mix, cache = ssd_block_decode(p["ssd"], cache, xn, cfg)
+    else:  # hymba
+        a, ac = gqa_decode(
+            p["attn"], cache["attn"], xn, cfg, run, pos, window=_window(kind, cfg)
+        )
+        s, sc = ssd_block_decode(p["ssd"], cache["ssm"], xn, cfg)
+        mix = 0.5 * (norm_apply(p["bnorm_a"], a) + norm_apply(p["bnorm_s"], s))
+        cache = {"attn": ac, "ssm": sc}
+    x = x + mix
+    if kind == "ssd":
+        return x, cache
+    xn = norm_apply(p["norm2"], x)
+    if kind.endswith("_moe"):
+        y, _ = _moe_ffn(p["ffn"], xn, cfg, run)
+    else:
+        y = mlp_apply(p["ffn"], xn, cfg.mlp)
+    return x + y, cache

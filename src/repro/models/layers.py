@@ -1,0 +1,141 @@
+"""Primitive layers: dual (params, specs) pytrees.
+
+Every ``*_init`` returns two parallel pytrees: arrays and logical-axis tuples
+(one logical name per array dim). The dist layer maps logical names to mesh
+axes (repro/dist/sharding.py). Keeping specs structural (not attached to the
+arrays) keeps everything a plain pytree for jit/scan/optimizers.
+
+Logical axis vocabulary:
+    batch seq embed heads kv_heads head_dim mlp vocab experts expert_mlp
+    layers state conv qk_rope kv_lora q_lora
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+Specs = dict[str, Any]
+
+
+def dense_init(
+    key,
+    in_dim: int,
+    out_dim: int,
+    in_axis: str | None,
+    out_axis: str | None,
+    bias: bool = False,
+    scale: float | None = None,
+    dtype=jnp.float32,
+) -> tuple[Params, Specs]:
+    s = (1.0 / math.sqrt(in_dim)) if scale is None else scale
+    p: Params = {"w": jax.random.normal(key, (in_dim, out_dim), dtype) * s}
+    sp: Specs = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        sp["b"] = (out_axis,)
+    return p, sp
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm") -> tuple[Params, Specs]:
+    p: Params = {"scale": jnp.ones((d,), jnp.float32)}
+    sp: Specs = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+        sp["bias"] = ("embed",)
+    return p, sp
+
+
+def norm_apply(p: Params, x: jax.Array, eps: float = 1e-6,
+               stats_only_f32: bool = False) -> jax.Array:
+    """RMSNorm / LayerNorm with fp32 accumulation.
+
+    stats_only_f32=True computes the reduction statistics in f32 but applies
+    the normalization in the input dtype (what fused TPU norm kernels do) —
+    this keeps the backward's residual-stream gradient chain in bf16 instead
+    of dragging f32 tensors through every layer (§Perf finding).
+    """
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        if stats_only_f32:
+            inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+            return (x - mu.astype(x.dtype)) * inv * p["scale"].astype(
+                x.dtype
+            ) + p["bias"].astype(x.dtype)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        if stats_only_f32:
+            inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+            return x * inv * p["scale"].astype(x.dtype)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> tuple[Params, Specs]:
+    p = {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed_apply(p: Params, ids: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(dtype), ids, axis=0)
+
+
+def lm_head_apply(p: Params, x: jax.Array) -> jax.Array:
+    """Project to (padded) vocab logits using the (vocab, embed) table."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> tuple[Params, Specs]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        p0, s0 = dense_init(ks[0], d, ff, "embed", "mlp")
+        p1, s1 = dense_init(ks[1], d, ff, "embed", "mlp")
+        p2, s2 = dense_init(ks[2], ff, d, "mlp", "embed")
+        return (
+            {"wi": p0, "wg": p1, "wo": p2},
+            {"wi": s0, "wg": s1, "wo": s2},
+        )
+    p0, s0 = dense_init(ks[0], d, ff, "embed", "mlp", bias=True)
+    p2, s2 = dense_init(ks[2], ff, d, "mlp", "embed", bias=True)
+    return {"wi": p0, "wo": p2}, {"wi": s0, "wo": s2}
+
+
+def mlp_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    from ..shardctx import constrain
+
+    mlp_axes = ("batch", "seq", "mlp")
+    if kind == "swiglu":
+        h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wi"], x)
+        return dense_apply(p["wo"], constrain(h, mlp_axes))
+    h = jax.nn.gelu(dense_apply(p["wi"], x))
+    return dense_apply(p["wo"], constrain(h, mlp_axes))
+
+
+def stack_init(init_fn, key, n: int) -> tuple[Params, Specs]:
+    """Stack ``n`` layers' params on a leading "layers" axis (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    p0, s0 = init_fn(keys[0])
+    stacked = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(
+        lambda ax: ("layers", *ax), s0, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return stacked, specs
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: softmax top-k router + sort-based dispatch.
+
+Dispatch avoids the (tokens, E, C) one-hot tensor of the GShard einsum
+formulation: routed (token, expert) pairs are sorted by expert id, ranked
+within expert, and scattered into an (E * C, d) buffer (capacity-dropped).
+This keeps the dense-path memory linear in tokens and maps directly onto the
+expert-parallel shard_map path (repro/dist/ep.py), where the buffer's E axis
+is what all_to_all / the DPM multicast schedule moves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MoEConfig
+from .layers import Params, Specs, dense_apply, dense_init
+
+
+def moe_init(key, cfg: ArchConfig) -> tuple[Params, Specs]:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p_router, s_router = dense_init(ks[0], d, m.n_experts, "embed", "experts")
+    # stacked expert weights: (E, d, ff) / (E, ff, d)
+    scale = d**-0.5
+    p = {
+        "router": p_router,
+        "wi": jax.random.normal(ks[1], (m.n_experts, d, m.d_expert)) * scale,
+        "wg": jax.random.normal(ks[2], (m.n_experts, d, m.d_expert)) * scale,
+        "wo": jax.random.normal(ks[3], (m.n_experts, m.d_expert, d))
+        * (m.d_expert**-0.5),
+    }
+    sp: Specs = {
+        "router": s_router,
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if m.n_shared:
+        p["shared_wi"] = (
+            jax.random.normal(ks[4], (d, m.n_shared * m.d_expert)) * scale
+        )
+        p["shared_wg"] = (
+            jax.random.normal(jax.random.fold_in(ks[4], 1), (d, m.n_shared * m.d_expert))
+            * scale
+        )
+        p["shared_wo"] = (
+            jax.random.normal(jax.random.fold_in(ks[4], 2), (m.n_shared * m.d_expert, d))
+            * (m.d_expert**-0.5)
+        )
+        sp["shared_wi"] = ("embed", "mlp")
+        sp["shared_wg"] = ("embed", "mlp")
+        sp["shared_wo"] = ("mlp", "embed")
+    return p, sp
+
+
+def route(p: Params, x: jax.Array, m: MoEConfig):
+    """Router: fp32 softmax over experts, top-k with renormalized weights.
+
+    Returns (expert ids (T,k), weights (T,k), aux load-balance loss).
+    """
+    logits = (x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    E = m.n_experts
+    assign = jnp.zeros((x.shape[0], E), jnp.float32)
+    assign = assign.at[jnp.arange(x.shape[0])[:, None], ids].add(1.0)
+    f = assign.mean(0) / m.top_k
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f * pbar)
+    return ids, weights, aux
+
+
+def capacity(m: MoEConfig, tokens: int) -> int:
+    c = int(tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def dispatch_indices(ids: jax.Array, m: MoEConfig, cap: int):
+    """Sort-based dispatch plan.
+
+    ids: (T, k) expert choices. Returns (slot (T*k,), keep (T*k,)) where slot
+    indexes an (E*cap,) buffer; dropped pairs get slot 0 / keep False.
+    """
+    Tk = ids.shape[0] * ids.shape[1]
+    flat = ids.reshape(Tk)
+    order = jnp.argsort(flat, stable=True)  # group by expert
+    ranked = jnp.zeros((Tk,), jnp.int32)
+    # rank within expert = position - first position of that expert
+    sorted_e = flat[order]
+    pos = jnp.arange(Tk)
+    first = jnp.full((m.n_experts,), Tk, jnp.int32).at[sorted_e].min(
+        pos.astype(jnp.int32), mode="drop"
+    )
+    rank_sorted = pos.astype(jnp.int32) - first[sorted_e]
+    ranked = ranked.at[order].set(rank_sorted)
+    keep = ranked < cap
+    slot = jnp.where(keep, flat * cap + ranked, 0)
+    return slot, keep
+
+
+def expert_ffn(p: Params, xe: jax.Array) -> jax.Array:
+    """xe: (E, cap, d) -> (E, cap, d) SwiGLU per expert."""
+    dt = xe.dtype
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(dt))
+
+
+def moe_apply_dense(p: Params, x: jax.Array, cfg: ArchConfig):
+    """GSPMD path: token-major in, (E, cap, d) expert compute, combine.
+
+    x: (B, S, d). Returns (y, aux_loss).
+    """
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    ids, w, aux = route(p, xt, m)
+    cap = capacity(m, T)
+    slot, keep = dispatch_indices(ids, m, cap)
+    k = m.top_k
+    xt_rep = jnp.repeat(xt, k, axis=0)  # (T*k, d) token per routed pair
+    from ..shardctx import constrain
+
+    buf = jnp.zeros((m.n_experts * cap, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt_rep, 0))
+    buf = constrain(buf.reshape(m.n_experts, cap, d), ("experts", None, None))
+    ye = expert_ffn(p, buf)
+    gathered = ye.reshape(m.n_experts * cap, d)[slot]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(T, k, d) * w[..., None].astype(x.dtype)).sum(1)
+    if m.n_shared:
+        h = xt @ p["shared_wi"].astype(x.dtype)
+        g = xt @ p["shared_wg"].astype(x.dtype)
+        y = y + (jax.nn.silu(g) * h) @ p["shared_wo"].astype(x.dtype)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,53 @@
+"""Rotary position embeddings: standard RoPE, Qwen2-VL M-RoPE, sinusoidal."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,  # (..., S, 3) — temporal, height, width ids
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: frequency bands split across (t, h, w) ids.
+
+    ``sections`` are in D/2 units (16+24+24 = 64 = 128/2 for head_dim 128).
+    For pure-text positions the three ids coincide and M-RoPE == RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d // 2)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions.shape[:-1] + (d // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # (..., S, D/2): per-band position id
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(..., S) -> (..., S, d) classic transformer sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

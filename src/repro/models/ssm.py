@@ -1,0 +1,287 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), pure jnp.
+
+Chunked algorithm: the sequence is split into chunks of length L; within a
+chunk the recurrence is computed in its quadratic "attention" dual form, and
+a lax.scan carries the (N x P) state across chunks. A Pallas kernel for the
+intra-chunk part lives in repro/kernels/ssd with this module's
+``ssd_reference`` as its oracle.
+
+Shapes: batch B, seq S, heads H, head_dim P, groups G, state N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, SSMConfig
+from .layers import Params, Specs, dense_apply, dense_init, norm_apply
+
+MIN_LOG = -30.0
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (already softplus'ed)
+    A: jax.Array,  # (H,) negative decay rates
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, N, P) initial state
+    return_state: bool = False,
+    stream_bf16: bool = False,
+):
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # dt=0 on padding => decay exp(0)=1 and zero state update: identity
+        # steps, so h_last stays exact and padded y rows are sliced off.
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    S_real, S = S, S + pad
+    nc = S // L
+
+    xf = x.astype(jnp.float32).reshape(B_, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, L, H)
+    Bf = Bm.astype(jnp.float32).reshape(B_, nc, L, G, N)
+    Cf = Cm.astype(jnp.float32).reshape(B_, nc, L, G, N)
+    Af = A.astype(jnp.float32)
+
+    # log-decay per step: (B, nc, L, H)
+    la = dtf * Af  # negative
+    cum = jnp.cumsum(la, axis=2)  # within-chunk cumulative log decay
+
+    # broadcast B,C across heads in group: head h uses group h // hpg
+    Bh = jnp.repeat(Bf, hpg, axis=3)  # (B, nc, L, H, N)
+    Ch = jnp.repeat(Cf, hpg, axis=3)
+
+    # ---- intra-chunk quadratic form ------------------------------------
+    # M[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j   for j <= i
+    st = jnp.bfloat16 if stream_bf16 else jnp.float32
+    cb = jnp.einsum(
+        "bclhn,bckhn->bchlk", Ch.astype(st), Bh.astype(st),
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,L,L)
+    # decay matrix exp(cum_i - cum_j) on the lower triangle
+    ci = cum.transpose(0, 1, 3, 2)  # (B,nc,H,L)
+    dmat = ci[..., :, None] - ci[..., None, :]  # (B,nc,H,L,L)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    m = jnp.where(tri, jnp.exp(jnp.maximum(dmat, MIN_LOG)), 0.0)
+    m = m * cb * dtf.transpose(0, 1, 3, 2)[..., None, :]  # * dt_j
+    y_intra = jnp.einsum(
+        "bchlk,bckhp->bclhp", m.astype(st), xf.astype(st),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk-boundary states -----------------------------------------
+    # state contribution of chunk c: sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    tail = jnp.exp(jnp.maximum(cum[:, :, -1:, :] - cum, MIN_LOG))  # (B,nc,L,H)
+    sc = jnp.einsum("bclh,bclh,bclhn,bclhp->bchnp", tail, dtf, Bh, xf)
+    chunk_decay = jnp.exp(jnp.maximum(cum[:, :, -1, :], MIN_LOG))  # (B,nc,H)
+
+    def step(h, inputs):
+        sc_c, dec_c = inputs  # (B,H,N,P), (B,H)
+        h_new = h * dec_c[..., None, None] + sc_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = (
+        jnp.zeros((B_, H, N, P), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_last, h_in = jax.lax.scan(
+        step,
+        h_init,
+        (sc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state entering chunk
+
+    # ---- inter-chunk contribution --------------------------------------
+    inter_decay = jnp.exp(jnp.maximum(cum, MIN_LOG))  # (B,nc,L,H)
+    y_inter = jnp.einsum(
+        "bclhn,bchnp,bclh->bclhp", Ch, h_in, inter_decay
+    )
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    if pad:
+        y = y[:, :S_real]
+    if return_state:
+        return y, h_last
+    return y
+
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Naive per-step recurrence (oracle for tests and the Pallas kernel)."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=2)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), hpg, axis=2)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32))  # (B,S,H)
+
+    def step(h, t):
+        ht = h * a[:, t][..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh[:, t] * dtf[:, t][..., None], xf[:, t]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], ht)
+        return ht, y
+
+    h = (
+        jnp.zeros((B_, H, N, P), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h  # (B,S,H,P), final state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba-2 block
+# ---------------------------------------------------------------------------
+def ssd_init(key, cfg: ArchConfig) -> tuple[Params, Specs]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    d_in = 2 * di + 2 * s.n_groups * s.d_state + H
+    p_in, sp_in = dense_init(ks[0], d, d_in, "embed", "mlp")
+    p_out, sp_out = dense_init(ks[1], di, d, "mlp", "embed")
+    p = {
+        "in_proj": p_in,
+        "out_proj": p_out,
+        "conv_w": jax.random.normal(ks[2], (s.d_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+    sp = {
+        "in_proj": sp_in,
+        "out_proj": sp_out,
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_scale": ("mlp",),
+    }
+    return p, sp
+
+
+def _split_zxbcdt(z_x_b_c_dt, di, gn, H):
+    z = z_x_b_c_dt[..., :di]
+    x = z_x_b_c_dt[..., di : 2 * di]
+    b = z_x_b_c_dt[..., 2 * di : 2 * di + gn]
+    c = z_x_b_c_dt[..., 2 * di + gn : 2 * di + 2 * gn]
+    dt = z_x_b_c_dt[..., 2 * di + 2 * gn :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv1d. xbc: (B,S,C); w: (K,C). state: (B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype) for i in range(K)
+    )
+    out = out + b.astype(xbc.dtype)
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = (yf * yf).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(y.dtype)
+
+
+def ssd_block_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                    return_state=False, stream_bf16=False, chunk=None):
+    s: SSMConfig = cfg.ssm
+    B_, S, d = x.shape
+    di, H, G, N = s.d_inner(d), s.n_heads(d), s.n_groups, s.d_state
+    from ..shardctx import constrain
+
+    zxbcdt = dense_apply(p["in_proj"], x)
+    zxbcdt = constrain(zxbcdt, ("batch", "seq", "mlp"))
+    z, xi, bm, cm, dt = _split_zxbcdt(zxbcdt, di, G * N, H)
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xi, bm, cm = (
+        xbc[..., :di],
+        xbc[..., di : di + G * N],
+        xbc[..., di + G * N :],
+    )
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssd_scan(
+        xi.reshape(B_, S, H, s.head_dim),
+        dtp,
+        A,
+        bm.reshape(B_, S, G, N),
+        cm.reshape(B_, S, G, N),
+        chunk or s.chunk,
+        return_state=True,
+        stream_bf16=stream_bf16,
+    )
+    y = y + xi.reshape(B_, S, H, s.head_dim) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = dense_apply(p["out_proj"], y)
+    if return_state:
+        return out, {"conv": conv_state, "state": h_last}
+    return out
+
+
+def ssd_init_cache(cfg: ArchConfig, batch: int):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di, H, G, N = s.d_inner(d), s.n_heads(d), s.n_groups, s.d_state
+    conv_dim = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+        "state": jnp.zeros((batch, H, N, s.head_dim), jnp.float32),
+    }
+
+
+def ssd_block_decode(p: Params, cache: dict, x: jax.Array, cfg: ArchConfig):
+    """Single-token recurrent step. x: (B, 1, d)."""
+    s: SSMConfig = cfg.ssm
+    B_, _, d = x.shape
+    di, H, G, N = s.d_inner(d), s.n_heads(d), s.n_groups, s.d_state
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xi, bm, cm, dt = _split_zxbcdt(zxbcdt, di, G * N, H)
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xi = xbc[..., :di].reshape(B_, H, s.head_dim)
+    bm = xbc[..., di : di + G * N].reshape(B_, G, N)
+    cm = xbc[..., di + G * N :].reshape(B_, G, N)
+    hpg = H // G
+    bh = jnp.repeat(bm, hpg, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cm, hpg, axis=1).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(dtp * -jnp.exp(p["A_log"]))  # (B,H)
+    h = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", bh * dtp[..., None], xi.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h) + xi.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return dense_apply(p["out_proj"], y), {"conv": conv_state, "state": h}

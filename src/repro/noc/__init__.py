@@ -1,0 +1,27 @@
+"""Cycle-level wormhole NoC simulator, traffic generators and power model."""
+from .config import DEST_RANGES, EnergyModel, NoCConfig
+from .simulator import SimStats, WormholeSim
+from .traffic import (
+    PARSEC_PROFILES,
+    Request,
+    Workload,
+    latency_vs_rate,
+    parsec_workload,
+    simulate,
+    synthetic_workload,
+)
+
+__all__ = [
+    "DEST_RANGES",
+    "EnergyModel",
+    "NoCConfig",
+    "PARSEC_PROFILES",
+    "Request",
+    "SimStats",
+    "Workload",
+    "WormholeSim",
+    "latency_vs_rate",
+    "parsec_workload",
+    "simulate",
+    "synthetic_workload",
+]

@@ -1,0 +1,4 @@
+"""Serving: batched generate + queue-based batch server."""
+from .engine import BatchServer, GenResult, Request, Response, generate
+
+__all__ = ["BatchServer", "GenResult", "Request", "Response", "generate"]

@@ -1,0 +1,130 @@
+"""Serving: batched prefill + decode with greedy/temperature sampling, and a
+queue-based batch server (deliverable b's serving example uses this)."""
+from __future__ import annotations
+
+import queue
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ArchConfig, RunConfig
+from ..models.model import decode_step, prefill
+
+
+@dataclass
+class GenResult:
+    tokens: np.ndarray  # (B, steps)
+    prefill_ms: float
+    decode_ms_per_token: float
+
+
+def generate(
+    params,
+    cfg: ArchConfig,
+    run: RunConfig,
+    prompts: jax.Array,  # (B, S) int32 (or frames (B, S, d))
+    steps: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> GenResult:
+    B = prompts.shape[0]
+    S = prompts.shape[1]
+    key_name = "tokens" if cfg.embed_input == "tokens" else "frames"
+
+    pf = jax.jit(
+        lambda p, b: prefill(p, b, cfg, run, cache_len=S + steps),
+        static_argnames=(),
+    )
+    dec = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg, run))
+
+    t0 = time.monotonic()
+    logits, caches = pf(params, {key_name: prompts})
+    logits.block_until_ready()
+    prefill_ms = (time.monotonic() - t0) * 1e3
+
+    out = np.zeros((B, steps), np.int32)
+    key = jax.random.PRNGKey(seed)
+    t1 = time.monotonic()
+    tok = None
+    for t in range(steps):
+        lg = logits[:, -1, : cfg.vocab]
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lg, axis=-1)
+        out[:, t] = np.asarray(tok)
+        if t == steps - 1:
+            break
+        batch = {"pos": jnp.int32(S + t)}
+        if cfg.embed_input == "tokens":
+            batch["tokens"] = tok[:, None].astype(jnp.int32)
+        else:  # frame models feed back an embedding stub
+            batch["frames"] = jnp.zeros((B, 1, cfg.d_model), jnp.float32)
+        logits, caches = dec(params, caches, batch)
+    decode_ms = (time.monotonic() - t1) * 1e3 / max(1, steps - 1)
+    return GenResult(out, prefill_ms, decode_ms)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_tokens: int
+    submitted: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class Response:
+    rid: int
+    tokens: np.ndarray
+    latency_s: float
+
+
+class BatchServer:
+    """Collect requests into fixed-size batches (pad to the longest prompt),
+    run generate(), return per-request responses. Continuous-batching-lite:
+    a new batch is admitted as soon as the previous one retires."""
+
+    def __init__(self, params, cfg: ArchConfig, run: RunConfig,
+                 max_batch: int = 8, max_wait_s: float = 0.05):
+        self.params, self.cfg, self.run = params, cfg, run
+        self.max_batch, self.max_wait_s = max_batch, max_wait_s
+        self.queue: queue.Queue[Request] = queue.Queue()
+        self.stats = {"batches": 0, "requests": 0, "tokens": 0}
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _take_batch(self) -> list[Request]:
+        reqs = [self.queue.get()]
+        deadline = time.monotonic() + self.max_wait_s
+        while len(reqs) < self.max_batch and time.monotonic() < deadline:
+            try:
+                reqs.append(self.queue.get(timeout=max(0, deadline - time.monotonic())))
+            except queue.Empty:
+                break
+        return reqs
+
+    def serve_once(self) -> list[Response]:
+        reqs = self._take_batch()
+        S = max(len(r.prompt) for r in reqs)
+        steps = max(r.max_tokens for r in reqs)
+        B = len(reqs)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):  # left-pad to align last token
+            prompts[i, S - len(r.prompt):] = r.prompt
+        res = generate(
+            self.params, self.cfg, self.run, jnp.asarray(prompts), steps
+        )
+        now = time.monotonic()
+        self.stats["batches"] += 1
+        self.stats["requests"] += B
+        self.stats["tokens"] += B * steps
+        return [
+            Response(r.rid, res.tokens[i, : r.max_tokens], now - r.submitted)
+            for i, r in enumerate(reqs)
+        ]

@@ -1,0 +1,39 @@
+"""Ambient sharding context for activation constraints inside jitted code.
+
+GSPMD propagation loses batch sharding across lax.scan carries (the dry-run
+roofline exposed fully-replicated activations inside the layer loop), so the
+model inserts logical-axis constraints at block boundaries. The launcher
+sets the context before tracing; without a context every call is a no-op, so
+single-device tests and CPU training are unaffected.
+
+Standalone module (not inside repro.dist) to avoid import cycles; the
+resolver is imported lazily at call time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+_CTX: dict[str, Any] = {"mesh": None, "rules": None}
+
+
+def set_ctx(mesh, rules=None) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = rules
+
+
+def clear_ctx() -> None:
+    set_ctx(None, None)
+
+
+def constrain(x, axes: tuple):
+    """with_sharding_constraint by logical axes; no-op without a context."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+
+    from .dist.sharding import spec_for_shape
+
+    spec = spec_for_shape(axes, x.shape, mesh, _CTX["rules"])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

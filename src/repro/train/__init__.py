@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, step builder, data pipeline, loop."""
+from .data import DataConfig, FileCorpus, Prefetcher, synthetic_batch
+from .loop import LoopConfig, LoopResult, train
+from .optim import TrainState, adamw_update, clip_by_global_norm, cosine_lr, init_state
+from .step import build_train_step, cast_params
+
+__all__ = [
+    "DataConfig", "FileCorpus", "LoopConfig", "LoopResult", "Prefetcher",
+    "TrainState", "adamw_update", "build_train_step", "cast_params",
+    "clip_by_global_norm", "cosine_lr", "init_state", "synthetic_batch",
+    "train",
+]

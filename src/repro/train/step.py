@@ -1,0 +1,70 @@
+"""Train-step builder: loss -> grads -> clip -> AdamW, with microbatch
+gradient accumulation and bf16 compute over fp32 master params."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig, RunConfig
+from ..models.model import loss_fn
+from .optim import TrainState, adamw_update, clip_by_global_norm, cosine_lr
+
+
+def cast_params(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    run: RunConfig,
+    *,
+    accum: int = 1,
+    lr_fn: Callable | None = None,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum`` > 1 splits the per-device batch into microbatches with a
+    lax.scan accumulation (fp32 grads)."""
+    compute_dtype = jnp.dtype(run.params_dtype)
+    lr_fn = lr_fn or cosine_lr(run)
+
+    def loss_of(params, batch):
+        return loss_fn(cast_params(params, compute_dtype), batch, cfg, run)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b, gacc, g)
+                return (gacc, lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, ltot), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = ltot / accum
+            metrics = {}
+        grads, gnorm = clip_by_global_norm(grads)
+        new_state = adamw_update(state, grads, run, lr_fn)
+        out = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr_fn(state.step),
+        }
+        out.update({k: v for k, v in (metrics or {}).items()})
+        return new_state, out
+
+    return train_step

@@ -1,0 +1,26 @@
+"""Distribution-layer tests (run in a subprocess with 8 forced host devices
+so the main pytest process keeps its 1-device view)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dist_checks_subprocess():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = {
+        "PYTHONPATH": str(root / "src"),
+        "PATH": "/usr/bin:/bin:/usr/local/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "dist_checks.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL DIST CHECKS PASSED" in proc.stdout

@@ -1,0 +1,185 @@
+"""Pallas kernel sweeps: shapes x dtypes vs pure-jnp oracles (interpret=True).
+
+Per the deliverable: for each kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py oracle.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import candidate_cost, grid
+from repro.core.partition import ALL_CANDIDATE_IDS, basic_partitions
+from repro.kernels.dpm_cost.dpm_cost import CANDS, dpm_cost_table
+from repro.kernels.dpm_cost.ops import dpm_plan, total_plan_cost
+from repro.kernels.dpm_cost.ref import dpm_cost_table_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_scan_pallas
+from repro.kernels.ssd.ref import ssd_reference
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_SHAPES = [
+    # (B, S, H, KH, D, bq, bk, window)
+    (1, 128, 4, 4, 64, 64, 64, None),  # MHA
+    (2, 256, 8, 2, 64, 128, 128, None),  # GQA 4:1
+    (2, 256, 8, 1, 32, 64, 128, None),  # MQA
+    (1, 200, 4, 2, 64, 64, 64, None),  # ragged (pad path)
+    (2, 256, 4, 4, 128, 64, 64, 96),  # sliding window
+    (1, 512, 2, 2, 64, 128, 256, 128),  # window, rectangular blocks
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, dtype):
+    B, S, H, KH, D, bq, bk, window = shape
+    key = jax.random.PRNGKey(hash(shape) & 0xFFFF)
+    q = jax.random.normal(key, (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, D), dtype)
+    out = flash_attention(
+        q, k, v, window=window, block_q=bq, block_k=bk, interpret=True
+    )
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        window=window,
+    ).transpose(0, 2, 1, 3)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_q_offset_decode_chunk():
+    """Chunked decode/extension: q_offset shifts the causal diagonal."""
+    key = jax.random.PRNGKey(7)
+    B, H, D = 1, 2, 64
+    Sk, Sq, off = 256, 64, 192  # queries are positions 192..255
+    q = jax.random.normal(key, (B, Sq, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, H, D))
+    out = flash_attention(q, k, v, q_offset=off, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        q_offset=off,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+SSD_SHAPES = [
+    # (B, S, H, P, G, N, chunk)
+    (1, 64, 2, 8, 1, 16, 16),
+    (2, 128, 4, 16, 2, 8, 32),
+    (2, 96, 4, 16, 2, 8, 32),  # ragged
+    (1, 256, 8, 32, 1, 64, 64),  # mamba2-like ratios
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(shape, dtype):
+    B, S, H, P, G, N, chunk = shape
+    key = jax.random.PRNGKey(hash(shape) & 0xFFFF)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, G, N), dtype)
+    y, h = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, hr = ssd_reference(x, dt, A, Bm, Cm)
+    atol = 5e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=atol
+    )
+    np.testing.assert_allclose(
+        np.asarray(h, np.float32), np.asarray(hr, np.float32), atol=atol
+    )
+
+
+# ---------------------------------------------------------------------------
+# dpm_cost
+# ---------------------------------------------------------------------------
+def _instances(n, m, P, seed):
+    g = grid(n, m)
+    rng = random.Random(seed)
+    nodes = [(x, y) for x in range(n) for y in range(m)]
+    masks, sxy, insts = [], [], []
+    for _ in range(P):
+        k = rng.randint(1, min(16, len(nodes) - 1))
+        picks = rng.sample(nodes, k + 1)
+        src, dests = picks[0], picks[1:]
+        row = np.zeros(n * m, np.int32)
+        for (x, y) in dests:
+            row[y * n + x] = 1
+        masks.append(row)
+        sxy.append(src)
+        insts.append((src, dests))
+    return jnp.array(np.stack(masks)), jnp.array(np.array(sxy, np.int32)), insts
+
+
+@pytest.mark.parametrize("mesh", [(4, 4), (8, 8), (16, 16), (8, 4)])
+@pytest.mark.parametrize("leg", [True, False])
+def test_dpm_cost_kernel_vs_ref(mesh, leg):
+    n, m = mesh
+    masks, sxy, _ = _instances(n, m, 33, seed=n * m + leg)
+    ck, rk = dpm_cost_table(
+        masks, sxy, n=n, m=m, include_source_leg=leg, interpret=True, tile=16
+    )
+    cr, rr = dpm_cost_table_ref(masks, sxy, n=n, m=m, include_source_leg=leg)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+
+
+def test_dpm_cost_vs_host_planner():
+    """Kernel MU-costs equal the host planner's Definition 1/2 values."""
+    n = 8
+    g = grid(n)
+    masks, sxy, insts = _instances(n, n, 25, seed=3)
+    ck, rk = dpm_cost_table(masks, sxy, n=n, interpret=True, tile=8)
+    for p, (src, dests) in enumerate(insts):
+        parts = basic_partitions(src, dests)
+        for ci, ids in enumerate(ALL_CANDIDATE_IDS):
+            assert CANDS[ci] == ids
+            union = [d for i in ids for d in parts[i]]
+            cc = candidate_cost(g, src, ids, union)
+            host = (cc.cost_mu + cc.source_leg) if union else 0
+            assert host == int(ck[p, ci]), (p, ids)
+            if union:
+                rep = cc.rep
+                assert int(rk[p, ci]) == rep[1] * n + rep[0]
+
+
+def test_dpm_plan_greedy_invariants():
+    """On-device greedy merge: exact disjoint cover of non-empty partitions,
+    and merged selections never increase cost vs unmerged singles."""
+    n = 8
+    masks, sxy, insts = _instances(n, n, 64, seed=11)
+    chosen, costs, reps = dpm_plan(masks, sxy, n=n, interpret=True)
+    bits = np.array([sum(1 << i for i in ids) for ids in CANDS])
+    singles_cost = np.asarray(costs[:, :8])
+    for p, (src, dests) in enumerate(insts):
+        parts = basic_partitions(src, dests)
+        nonempty = sum(1 << i for i in range(8) if parts[i])
+        sel = np.where(np.asarray(chosen[p]))[0]
+        cover = 0
+        for ci in sel:
+            assert cover & bits[ci] & nonempty == 0
+            cover |= bits[ci]
+        assert cover & nonempty == nonempty
+        tot = int(np.asarray(total_plan_cost(chosen, costs))[p])
+        assert tot <= singles_cost[p].sum()  # merging never hurts

@@ -1,0 +1,220 @@
+"""Per-arch smoke tests + attention/SSD/MoE unit tests (reduced configs).
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); everything here runs real numbers on CPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SMOKES
+from repro.models import (
+    RunConfig,
+    count_params,
+    decode_step,
+    forward,
+    init_caches,
+    model_init,
+    prefill,
+)
+from repro.models.attention import chunked_attention, dequantize_kv, quantize_kv
+from repro.models.ssm import ssd_reference, ssd_scan
+
+RUN = RunConfig(
+    remat="none",
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+    vocab_round=64,
+    activations_dtype="float32",
+    kv_cache_dtype="float32",
+)
+
+
+def _batch(cfg, B, S, key, labels=True):
+    out = {}
+    if cfg.embed_input == "tokens":
+        out["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    else:
+        out["frames"] = jax.random.normal(key, (B, S, cfg.d_model))
+    if labels:
+        out["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return out
+
+
+# ------------------------------------------------------------------ smoke
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_arch_smoke_forward(name):
+    """One forward/train step on CPU: output shapes + no NaNs (deliverable f)."""
+    cfg = SMOKES[name]
+    params, specs = model_init(jax.random.PRNGKey(0), cfg, RUN)
+    # specs mirror params structurally
+    assert jax.tree.structure(
+        jax.tree.map(lambda _: 0, params)
+    ) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, specs, is_leaf=lambda x: isinstance(x, tuple))
+    )
+    batch = _batch(cfg, 2, 64, jax.random.PRNGKey(1))
+    loss, metrics = forward(params, batch, cfg, RUN)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert float(loss) > 0
+    # grads flow and are finite
+    g = jax.grad(lambda p: forward(p, batch, cfg, RUN)[0])(params)
+    leaves = jax.tree.leaves(g)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_arch_smoke_decode_shapes(name):
+    cfg = SMOKES[name]
+    params, _ = model_init(jax.random.PRNGKey(0), cfg, RUN)
+    B = 2
+    caches = init_caches(cfg, RUN, B, 128)
+    db = _batch(cfg, B, 1, jax.random.PRNGKey(2), labels=False)
+    db["pos"] = jnp.int32(5)
+    logits, caches2 = decode_step(params, caches, db, cfg, RUN)
+    assert logits.shape[:2] == (B, 1)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["hymba-1.5b", "deepseek-v2-236b", "musicgen-medium", "smollm-135m",
+     "mamba2-1.3b"],
+)
+def test_decode_matches_teacher_forcing(name):
+    """Prefill + decode logits == fresh full-forward logits (cache logic,
+    ring SWA, MLA absorption, SSD state, sinusoidal offsets)."""
+    cfg = SMOKES[name]
+    if cfg.moe:  # capacity drops are legitimate differences; remove them
+        cfg = cfg.scaled(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params, _ = model_init(jax.random.PRNGKey(0), cfg, RUN)
+    B, S, STEPS = 2, 128, 2
+    full = _batch(cfg, B, S + STEPS, jax.random.PRNGKey(1), labels=False)
+
+    def cut(n):
+        return {k: v[:, :n] for k, v in full.items()}
+
+    def one(i):
+        return {k: v[:, i : i + 1] for k, v in full.items()}
+
+    _, caches = prefill(params, cut(S), cfg, RUN, cache_len=S + STEPS)
+    for t in range(STEPS):
+        pos = S + t
+        db = dict(one(pos))
+        db["pos"] = jnp.int32(pos)
+        logits_dec, caches = decode_step(params, caches, db, cfg, RUN)
+        ref, _ = prefill(params, cut(pos + 1), cfg, RUN)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec[:, 0]), np.asarray(ref[:, 0]), atol=2e-3
+        )
+
+
+def test_full_configs_param_counts():
+    """Full configs' parameter counts match the advertised sizes (via
+    eval_shape — no allocation)."""
+    run = RunConfig()
+    expect = {  # billions, generous brackets (embeddings/vocab padding vary)
+        "smollm-135m": (0.12, 0.16),
+        "stablelm-1.6b": (1.2, 1.9),
+        "starcoder2-7b": (6.0, 8.0),
+        "qwen1.5-32b": (28.0, 37.0),  # assignment MHA kv=40 (> real kv=8)
+        "hymba-1.5b": (1.2, 2.0),
+        "mamba2-1.3b": (1.0, 1.6),
+        "musicgen-medium": (1.3, 2.2),
+        "deepseek-v2-236b": (210.0, 250.0),
+        # assignment's 48L/64e/1408ff is larger than real Moonlight (27L):
+        "moonshot-v1-16b-a3b": (26.0, 31.0),
+        "qwen2-vl-72b": (65.0, 78.0),
+    }
+    from repro.models import model_init as mi
+
+    for name, (lo, hi) in expect.items():
+        cfg = ARCHS[name]
+        shapes = jax.eval_shape(
+            lambda k: mi(k, cfg, run)[0], jax.random.PRNGKey(0)
+        )
+        n = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)) / 1e9
+        assert lo <= n <= hi, f"{name}: {n:.2f}B outside [{lo},{hi}]"
+
+
+# ------------------------------------------------------------- unit tests
+def test_chunked_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KH, D = 2, 96, 8, 2, 16  # ragged S (not a chunk multiple)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, D))
+
+    def naive(q, k, v, window=None):
+        G = H // KH
+        kk = jnp.repeat(k, G, axis=2)
+        vv = jnp.repeat(v, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * D**-0.5
+        i, j = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        s = jnp.where(mask, s, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+    for window in (None, 24):
+        for cq, ck in ((32, 32), (16, 64), (96, 96)):
+            # repeat k along groups: naive uses kh-major grouping like impl
+            out = chunked_attention(
+                q, k, v, causal=True, window=window, chunk_q=cq, chunk_k=ck
+            )
+            # impl groups q as (KH, G); naive repeats kv G-per-kh: reorder q
+            qg = q.reshape(B, S, KH, H // KH, D).reshape(B, S, H, D)
+            ref = naive(qg, k, v, window)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref), atol=2e-5
+            )
+
+
+def test_ssd_scan_matches_reference():
+    key = jax.random.PRNGKey(3)
+    B, S, H, P, G, N = 2, 80, 4, 8, 2, 16  # ragged S
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_ref, h_ref = ssd_reference(x, dt, A, Bm, Cm)
+    for chunk in (16, 32, 80):
+        y, h = ssd_scan(x, dt, A, Bm, Cm, chunk, return_state=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-4)
+
+
+def test_int8_kv_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32)) * 3.0
+    q, s = quantize_kv(x)
+    y = dequantize_kv(q, s, jnp.float32)
+    err = jnp.abs(y - x).max() / jnp.abs(x).max()
+    assert float(err) < 0.02  # ~1/127 relative
+
+
+def test_int8_kv_decode_close_to_bf16():
+    cfg = SMOKES["qwen1.5-32b"]
+    params, _ = model_init(jax.random.PRNGKey(0), cfg, RUN)
+    run8 = dataclasses.replace(RUN, kv_cache_dtype="int8")
+    B, S = 2, 64
+    full = _batch(cfg, B, S + 1, jax.random.PRNGKey(1), labels=False)
+    cut = {k: v[:, :S] for k, v in full.items()}
+    one = {k: v[:, S : S + 1] for k, v in full.items()}
+    outs = {}
+    for label, run in (("fp32", RUN), ("int8", run8)):
+        _, caches = prefill(params, cut, cfg, run, cache_len=S + 1)
+        db = dict(one)
+        db["pos"] = jnp.int32(S)
+        logits, _ = decode_step(params, caches, db, cfg, run)
+        outs[label] = np.asarray(logits[:, 0, : cfg.vocab])
+    # int8 KV must preserve the argmax and stay close in logit space
+    assert (outs["fp32"].argmax(-1) == outs["int8"].argmax(-1)).all()
+    assert np.abs(outs["fp32"] - outs["int8"]).max() < 0.35

@@ -1,0 +1,142 @@
+"""Behaviour tests for the flit-level wormhole NoC simulator."""
+import pytest
+
+from repro.core import grid, plan
+from repro.noc import (
+    DEST_RANGES,
+    NoCConfig,
+    WormholeSim,
+    parsec_workload,
+    simulate,
+    synthetic_workload,
+)
+
+CFG = NoCConfig()
+G = grid(8)
+
+
+def test_zero_load_unicast_latency():
+    """Unobstructed wormhole latency = hops + F - 2 in this model
+    (one-cycle header per hop, tail F-1 flits behind, same-cycle ejection)."""
+    for src, dst in [((0, 0), (2, 2)), ((0, 0), (7, 7)), ((3, 3), (3, 4))]:
+        sim = WormholeSim(CFG)
+        sim.add_plan(plan("MU", G, src, [dst]), 0)
+        st = sim.run(200)
+        hops = G.manhattan(src, dst)
+        assert st.latencies == [hops + CFG.flits_per_packet - 2]
+
+
+def test_all_destinations_delivered_every_algorithm():
+    wl = synthetic_workload(CFG, 0.03, 400, seed=11)
+    for algo in ("MU", "MP", "NMP", "DPM"):
+        sim = WormholeSim(CFG)
+        expect = 0
+        for r in wl.requests:
+            p = plan(algo, G, r.src, r.dests)
+            sim.add_plan(p, r.time)
+            expect += len(r.dests)
+        st = sim.run(100_000)
+        assert st.packets_created == st.packets_finished
+        delivered = sum(len(pk.delivery_times) for pk in sim.packets)
+        assert delivered >= expect  # >= because reps absorb + pass-through
+
+
+def test_flit_conservation():
+    """Every flit of every packet traverses every link of its route once."""
+    wl = synthetic_workload(CFG, 0.02, 300, seed=7)
+    sim = WormholeSim(CFG)
+    total_stage_flits = 0
+    for r in wl.requests:
+        p = plan("DPM", G, r.src, r.dests)
+        sim.add_plan(p, r.time)
+    st = sim.run(100_000)
+    total_stage_flits = sum(
+        pk.num_stages * CFG.flits_per_packet for pk in sim.packets
+    )
+    assert st.flit_link_traversals == total_stage_flits
+    assert st.buffer_writes == total_stage_flits  # one write per traversal
+
+
+def test_wormhole_serialization_on_shared_link():
+    """Two packets over the same link: second header waits (1 flit/link/cyc)."""
+    sim = WormholeSim(CFG)
+    sim.add_plan(plan("MU", G, (0, 0), [(4, 0)]), 0)
+    sim.add_plan(plan("MU", G, (0, 0), [(4, 0)]), 0)
+    st = sim.run(200)
+    lats = sorted(st.latencies)
+    base = 4 + CFG.flits_per_packet - 2
+    assert lats[0] == base
+    # second packet's header must wait for 4 flits of the first
+    assert lats[1] >= base + CFG.flits_per_packet - 1
+
+
+def test_multicast_chain_delivery_order():
+    """Path-based chain delivers in path order with increasing times."""
+    dests = [(2, 0), (5, 0), (7, 0)]
+    sim = WormholeSim(CFG)
+    sim.add_plan(plan("MP", G, (0, 0), dests), 0)
+    sim.run(500)
+    pk = next(p for p in sim.packets if len(p.deliveries) > 1)
+    times = [pk.delivery_times[d] for d in dests if d in pk.delivery_times]
+    assert times == sorted(times)
+
+
+def test_dpm_child_released_after_parent_header():
+    sim = WormholeSim(CFG)
+    # far-apart clusters force MU-mode children somewhere
+    dests = [(6, 6), (7, 6), (6, 7), (1, 1), (0, 1), (1, 0)]
+    sim.add_plan(plan("DPM", G, (3, 3), dests), 0)
+    st = sim.run(2000)
+    assert st.packets_created == st.packets_finished
+    for pk in sim.packets:
+        if pk.parent is not None:
+            par = sim.packets[pk.parent]
+            assert par.header_times[pk.hops[0]] < pk.delivery_times[pk.hops[-1]]
+
+
+def test_deterministic_given_seed():
+    wl1 = synthetic_workload(CFG, 0.03, 300, seed=5)
+    wl2 = synthetic_workload(CFG, 0.03, 300, seed=5)
+    s1 = simulate(CFG, wl1, "DPM")
+    s2 = simulate(CFG, wl2, "DPM")
+    assert s1.latencies == s2.latencies
+    assert s1.flit_link_traversals == s2.flit_link_traversals
+
+
+def test_latency_ordering_medium_load():
+    """Paper Fig 6 qualitative claim at a mid-load point: DPM/NMP < MP < MU
+    fails only if the sim regresses badly; exact margins live in benchmarks."""
+    cfg = NoCConfig(dest_range=(4, 8))
+    wl = synthetic_workload(cfg, 0.05, 800, seed=3)
+    lat = {a: simulate(cfg, wl, a).avg_latency for a in ("MU", "MP", "NMP", "DPM")}
+    # The paper's core latency claim: DPM beats every baseline.
+    assert lat["DPM"] < lat["MP"]
+    assert lat["DPM"] < lat["MU"]
+    assert lat["DPM"] < lat["NMP"] * 1.1  # parity-or-better vs idealized NMP
+
+
+def test_power_counters_track_hops():
+    cfg = NoCConfig()
+    wl = synthetic_workload(cfg, 0.04, 400, seed=9)
+    st_mu = simulate(cfg, wl, "MU")
+    st_dpm = simulate(cfg, wl, "DPM")
+    e = cfg.energy
+    # DPM's whole point: fewer flit-hops => less dynamic energy than MU
+    assert st_dpm.dyn_energy_pj(e) < st_mu.dyn_energy_pj(e)
+
+
+@pytest.mark.parametrize("bench", ["blackscholes", "fluidanimate"])
+def test_parsec_workloads_run(bench):
+    cfg = NoCConfig()
+    wl = parsec_workload(cfg, bench, 400, seed=1)
+    assert wl.requests, "trace must generate traffic"
+    st = simulate(cfg, wl, "DPM")
+    assert st.packets_created == st.packets_finished
+
+
+@pytest.mark.parametrize("dr", DEST_RANGES)
+def test_all_dest_ranges_drain(dr):
+    cfg = NoCConfig(dest_range=dr)
+    wl = synthetic_workload(cfg, 0.02, 300, seed=2)
+    st = simulate(cfg, wl, "DPM")
+    assert st.packets_created == st.packets_finished
