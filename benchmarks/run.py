@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma-separated module names (fig6,fig7,fig8,partition,tpu,kernels)",
+        help="comma-separated module names (fig6,fig7,fig8,partition,tpu,torus,kernels)",
     )
     args = ap.parse_args()
 
@@ -27,6 +27,7 @@ def main() -> None:
         fig8_traces,
         kernels_micro,
         partition_quality,
+        torus_planner,
         tpu_multicast,
     )
 
@@ -36,6 +37,7 @@ def main() -> None:
         "fig8": fig8_traces.run,
         "partition": partition_quality.run,
         "tpu": tpu_multicast.run,
+        "torus": torus_planner.run,
         "kernels": kernels_micro.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

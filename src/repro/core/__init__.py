@@ -2,8 +2,11 @@
 
 Public API:
     MeshGrid, grid                         — mesh geometry + Hamiltonian labels
+    Torus, torus, make_topology, Topology  — wraparound torus + the protocol
     basic_partitions, dpm_partition        — Definitions 1-3 + Algorithm 1
     plan / PLANNERS                        — MU / DP / MP / NMP / DPM planners
+
+Every planner and routing function takes any Topology (mesh or torus).
 """
 from .grid import Coord, MeshGrid, grid
 from .partition import (
@@ -35,6 +38,7 @@ from .routing import (
     path_multicast,
     xy_route,
 )
+from .topology import Topology, Torus, make_topology, ring_delta, torus
 
 __all__ = [
     "ALL_CANDIDATE_IDS",
@@ -62,5 +66,10 @@ __all__ = [
     "plan_mu",
     "plan_nmp",
     "representative",
+    "ring_delta",
+    "Topology",
+    "Torus",
+    "make_topology",
+    "torus",
     "xy_route",
 ]

@@ -22,10 +22,17 @@ Coord = tuple[int, int]
 
 @dataclass(frozen=True)
 class MeshGrid:
-    """An n_cols x n_rows 2-D mesh (the paper uses square 8x8)."""
+    """An n_cols x n_rows 2-D mesh (the paper uses square 8x8).
+
+    This is the mesh instance of the ``Topology`` protocol (see
+    core/topology.py); ``Torus`` subclasses it with wraparound geometry.
+    """
 
     n: int  # columns (x in [0, n))
     m: int | None = None  # rows (y in [0, m)); defaults to n
+
+    kind = "mesh"  # topology discriminator (planner cache key)
+    wrap = False
 
     @property
     def rows(self) -> int:
@@ -51,9 +58,17 @@ class MeshGrid:
         """Row-major label L = y*n + x (used by NMP [18])."""
         return y * self.n + x
 
+    def idx(self, c: Coord) -> int:
+        """Row-major rank index of a node (the kernels' node numbering)."""
+        return c[1] * self.n + c[0]
+
     # -- geometry ------------------------------------------------------------
     def in_bounds(self, x: int, y: int) -> bool:
         return 0 <= x < self.n and 0 <= y < self.rows
+
+    def normalize(self, x: int, y: int) -> Coord:
+        """Canonical coordinates (identity on a mesh, modulo on a torus)."""
+        return x, y
 
     def neighbors(self, x: int, y: int) -> list[Coord]:
         out = []
@@ -62,6 +77,15 @@ class MeshGrid:
             if self.in_bounds(nx, ny):
                 out.append((nx, ny))
         return out
+
+    def delta(self, a: Coord, b: Coord) -> Coord:
+        """Signed per-dimension displacement of a minimal route a -> b."""
+        return b[0] - a[0], b[1] - a[1]
+
+    def distance(self, a: Coord, b: Coord) -> int:
+        """Minimal hop count a -> b (Manhattan; toroidal on a torus)."""
+        dx, dy = self.delta(a, b)
+        return abs(dx) + abs(dy)
 
     @staticmethod
     def manhattan(a: Coord, b: Coord) -> int:
@@ -84,5 +108,11 @@ class MeshGrid:
 
 
 @functools.lru_cache(maxsize=None)
-def grid(n: int, m: int | None = None) -> MeshGrid:
+def _grid(n: int, m: int) -> MeshGrid:
     return MeshGrid(n, m)
+
+
+def grid(n: int, m: int | None = None) -> MeshGrid:
+    """Interned mesh factory. ``m`` is normalized (grid(8) is grid(8, 8)) so
+    equivalent geometries share one instance and one planner-cache key."""
+    return _grid(n, n if m is None else m)

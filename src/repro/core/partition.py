@@ -20,33 +20,46 @@ TRIPLE_IDS: list[tuple[int, ...]] = [(i, (i + 1) % 8, (i + 2) % 8) for i in rang
 ALL_CANDIDATE_IDS: list[tuple[int, ...]] = SINGLE_IDS + PAIR_IDS + TRIPLE_IDS
 
 
-def basic_partitions(src: Coord, dests: list[Coord]) -> list[list[Coord]]:
+def basic_partitions(
+    src: Coord, dests: list[Coord], topo: MeshGrid | None = None
+) -> list[list[Coord]]:
     """Split destinations into the 8 basic partitions P0..P7 around ``src``.
 
-    P0: x>sx, y>sy   P1: x=sx, y>sy   P2: x<sx, y>sy   P3: x<sx, y=sy
-    P4: x<sx, y<sy   P5: x=sx, y<sy   P6: x>sx, y<sy   P7: x>sx, y=sy
+    Membership is the sign pattern of the signed shortest displacement
+    (dx, dy) from the source:
+
+    P0: dx>0, dy>0   P1: dx=0, dy>0   P2: dx<0, dy>0   P3: dx<0, dy=0
+    P4: dx<0, dy<0   P5: dx=0, dy<0   P6: dx>0, dy<0   P7: dx>0, dy=0
     (counter-clockwise starting from the upper-right quadrant, Fig. 2a).
-    Edge/corner sources simply leave the out-of-mesh partitions empty.
+
+    Without ``topo`` (or on a mesh) the displacement is the plain coordinate
+    difference, reproducing the paper's geometry; edge/corner sources simply
+    leave the out-of-mesh partitions empty. On a torus ``topo.delta`` takes
+    the shorter way around each ring, so each partition is the wedge of
+    nodes whose minimal route leaves the source in that direction
+    (DESIGN.md §3).
     """
-    sx, sy = src
     parts: list[list[Coord]] = [[] for _ in range(8)]
     for d in dests:
-        dx, dy = d
-        if dx > sx and dy > sy:
+        if topo is None:
+            dx, dy = d[0] - src[0], d[1] - src[1]
+        else:
+            dx, dy = topo.delta(src, d)
+        if dx > 0 and dy > 0:
             parts[0].append(d)
-        elif dx == sx and dy > sy:
+        elif dx == 0 and dy > 0:
             parts[1].append(d)
-        elif dx < sx and dy > sy:
+        elif dx < 0 and dy > 0:
             parts[2].append(d)
-        elif dx < sx and dy == sy:
+        elif dx < 0 and dy == 0:
             parts[3].append(d)
-        elif dx < sx and dy < sy:
+        elif dx < 0 and dy < 0:
             parts[4].append(d)
-        elif dx == sx and dy < sy:
+        elif dx == 0 and dy < 0:
             parts[5].append(d)
-        elif dx > sx and dy < sy:
+        elif dx > 0 and dy < 0:
             parts[6].append(d)
-        elif dx > sx and dy == sy:
+        elif dx > 0 and dy == 0:
             parts[7].append(d)
         else:  # d == src: already "delivered"; drop it
             pass
@@ -71,11 +84,11 @@ class PartitionCost:
 
 
 def representative(g: MeshGrid, src: Coord, dests: list[Coord]) -> Coord:
-    """Definition 1: nearest destination to the source (Manhattan).
+    """Definition 1: nearest destination to the source (topology distance).
 
     Ties broken by smallest boustrophedon label for determinism.
     """
-    return min(dests, key=lambda d: (g.manhattan(src, d), g.label(*d)))
+    return min(dests, key=lambda d: (g.distance(src, d), g.label(*d)))
 
 
 def candidate_cost(
@@ -123,8 +136,10 @@ def dpm_partition(
     C_i (see DESIGN.md §2 — Definition 2 as printed excludes it; the stated
     objective function includes it; default True).
     ``max_merge`` is the paper's limit of 3 consecutive partitions.
+    ``g`` may be a MeshGrid or a Torus; all distances, partitions, and
+    routes follow the topology.
     """
-    parts = basic_partitions(src, dests)
+    parts = basic_partitions(src, dests, g)
 
     candidate_ids = list(SINGLE_IDS)
     if max_merge >= 2:
@@ -196,7 +211,7 @@ def brute_force_partition(
     candidate index sets and returns (min cost, chosen ids). This is the
     optimum of the *restricted* set-cover the paper's heuristic addresses.
     """
-    parts = basic_partitions(src, dests)
+    parts = basic_partitions(src, dests, g)
     nonempty = frozenset(i for i in range(8) if parts[i])
     costs: dict[tuple[int, ...], int] = {}
     for ids in ALL_CANDIDATE_IDS:

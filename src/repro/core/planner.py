@@ -15,9 +15,10 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass, field
 
-from .grid import Coord, MeshGrid, grid
+from .grid import Coord, MeshGrid
 from .partition import basic_partitions, dpm_partition
 from .routing import greedy_tour, path_multicast, xy_route
+from .topology import make_topology
 
 
 @dataclass
@@ -188,10 +189,19 @@ PLANNERS = {
 
 
 @functools.lru_cache(maxsize=200_000)
-def _plan_cached(n: int, m: int, algo: str, src: Coord, dests: tuple[Coord, ...]):
-    return PLANNERS[algo](grid(n, m), src, list(dests))
+def _plan_cached(
+    kind: str, n: int, m: int, algo: str, src: Coord, dests: tuple[Coord, ...]
+):
+    return PLANNERS[algo](make_topology(kind, n, m), src, list(dests))
 
 
 def plan(algo: str, g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
-    """Cached planner entry point (plans are deterministic per instance)."""
-    return _plan_cached(g.n, g.rows, algo, src, tuple(sorted(set(dests))))
+    """Cached planner entry point (plans are deterministic per instance).
+
+    The cache key is normalized — (topology kind, n, rows, algo, src, sorted
+    unique dests) — so grid(8) and grid(8, 8) share one entry and mesh/torus
+    plans of the same dimensions never collide.
+    """
+    return _plan_cached(
+        g.kind, g.n, g.rows, algo, src, tuple(sorted(set(dests)))
+    )

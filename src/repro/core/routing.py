@@ -1,19 +1,26 @@
-"""Unicast and path-based multicast routing functions on the 2-D mesh.
+"""Unicast and path-based multicast routing functions, topology-generic.
 
 Three routing functions are used by the algorithms in this repo:
 
 * ``xy_route``      — dimension-ordered XY (x first, then y). Used by MU and by
-                      the S->R delivery leg of DPM.
+                      the S->R delivery leg of DPM. Each dimension travels its
+                      signed shortest leg (``Topology.delta``), so on a torus
+                      the route takes the shorter way around each ring and its
+                      length always equals ``Topology.distance``.
 * ``label_route``   — the Lin–McKinley dual-path routing function: in the
                       high-channel subnetwork move to the neighbor with the
                       largest label that does not exceed the target label; in
                       the low-channel subnetwork the mirror rule. Guarantees
-                      progress along the Hamiltonian path with mesh shortcuts.
+                      progress along the Hamiltonian path with mesh shortcuts;
+                      on a torus the wrap links only add shortcuts (the snake
+                      successor is still a neighbor), so the same monotone
+                      progress argument applies.
 * ``greedy_tour``   — NMP's nearest-destination-first tour with XY legs.
 
 All functions return explicit hop sequences (lists of (x, y) coords starting
 at the source), which the cycle-level simulator consumes directly and whose
-lengths are the hop-count costs used by the planners.
+lengths are the hop-count costs used by the planners. ``g`` is any
+``Topology`` (MeshGrid or Torus).
 """
 from __future__ import annotations
 
@@ -21,14 +28,17 @@ from .grid import Coord, MeshGrid
 
 
 def xy_route(g: MeshGrid, src: Coord, dst: Coord) -> list[Coord]:
-    """Dimension-ordered route, inclusive of both endpoints."""
+    """Dimension-ordered minimal route, inclusive of both endpoints."""
+    dx, dy = g.delta(src, dst)
     x, y = src
     path = [src]
-    while x != dst[0]:
-        x += 1 if dst[0] > x else -1
+    step = 1 if dx > 0 else -1
+    for _ in range(abs(dx)):
+        x, y = g.normalize(x + step, y)
         path.append((x, y))
-    while y != dst[1]:
-        y += 1 if dst[1] > y else -1
+    step = 1 if dy > 0 else -1
+    for _ in range(abs(dy)):
+        x, y = g.normalize(x, y + step)
         path.append((x, y))
     return path
 
@@ -102,7 +112,7 @@ def greedy_tour(g: MeshGrid, src: Coord, dests: list[Coord]) -> list[Coord]:
     cur = src
     pending = list(dests)
     while pending:
-        nxt = min(pending, key=lambda d: (g.manhattan(cur, d), g.row_major(*d)))
+        nxt = min(pending, key=lambda d: (g.distance(cur, d), g.row_major(*d)))
         leg = xy_route(g, cur, nxt)
         path.extend(leg[1:])
         cur = nxt
@@ -132,5 +142,6 @@ def dual_path_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
 
 
 def multi_unicast_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
-    """Definition 2's C_t: sum of Manhattan distances src -> each destination."""
-    return sum(g.manhattan(src, d) for d in dests)
+    """Definition 2's C_t: sum of minimal distances src -> each destination
+    (Manhattan on the mesh, toroidal Manhattan on the torus)."""
+    return sum(g.distance(src, d) for d in dests)

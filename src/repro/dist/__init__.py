@@ -1,0 +1,25 @@
+"""Distribution layer: collective scheduling on accelerator interconnects.
+
+``repro.dist.multicast`` turns the paper's DPM partitioning into a
+round-based ppermute scheduler for torus/ring collectives (DESIGN.md §3).
+
+Other submodules referenced by the launch layer (``sharding``, ``ep``,
+``pipeline``, ``compress``) are planned and land in later PRs.
+"""
+from .multicast import (
+    Schedule,
+    Torus,
+    apply_schedule,
+    dp_broadcast_schedule,
+    plan_torus_multicast,
+    schedule_multicasts,
+)
+
+__all__ = [
+    "Schedule",
+    "Torus",
+    "apply_schedule",
+    "dp_broadcast_schedule",
+    "plan_torus_multicast",
+    "schedule_multicasts",
+]

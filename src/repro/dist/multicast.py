@@ -1,0 +1,202 @@
+"""Multicast scheduling on the accelerator torus (DESIGN.md §3).
+
+The paper's DPM is a NoC routing optimization; this module lifts it one
+level up: given a batch of concurrent multicast requests on a wraparound
+torus (a TPU-pod ICI, or a 1-D rank ring for a data-parallel axis), produce
+a round-based store-and-forward schedule in which every round is a partial
+permutation — directly realizable as one ``jax.lax.ppermute`` per round.
+
+Pipeline:
+
+1. plan each request with any ``repro.core`` planner (default DPM) on the
+   torus geometry;
+2. decompose each wormhole packet path into *relay edges* ``holder ->
+   next delivery`` — the path-order chain of a path-based multicast, with
+   DPM's MU-mode children chained behind the representative's delivery;
+3. greedily pack ready edges (sender already holds the payload) into rounds
+   under ppermute's unique-sender / unique-receiver constraint.
+
+``apply_schedule`` executes a schedule on a shard_map-local array;
+``dp_broadcast_schedule`` specializes to a 1-D rank ring, which is how the
+launch layer broadcasts parameters along a data axis. ``Schedule.cost``
+prices a schedule with an alpha-beta-hop model for benchmark comparisons.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..core.grid import Coord
+from ..core.planner import MulticastPlan, plan
+from ..core.topology import Torus, make_topology, torus
+
+# Alpha-beta-hop calibration constants for Schedule.cost: per-round software/
+# launch latency, per-hop fall-through, per-link bandwidth. Absolute values
+# are ICI-ballpark; benchmarks compare algorithms *relatively*, exactly as
+# the NoC EnergyModel does for power.
+ALPHA_US = 1.0
+HOP_US = 0.3
+LINK_GBPS = 45.0
+
+
+@dataclass
+class Schedule:
+    """Round-based store-and-forward multicast schedule.
+
+    ``rounds[r]`` is a list of ``(sender_rank, receiver_rank)`` pairs and
+    ``hops[r]`` the matching hop distances along the planned paths. Each
+    round has unique senders and unique receivers, so it maps 1:1 onto a
+    ``jax.lax.ppermute``; a sender only ever forwards a payload delivered to
+    it in an earlier round (store-and-forward causality, per request).
+    ``round_reqs[r]`` attributes each transfer to its request index.
+    """
+
+    num_ranks: int
+    rounds: list[list[tuple[int, int]]]
+    hops: list[list[int]] = field(default_factory=list)
+    round_reqs: list[list[int]] = field(default_factory=list)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def total_hops(self) -> int:
+        return sum(sum(h) for h in self.hops)
+
+    def cost(
+        self,
+        payload_bytes: int,
+        alpha_us: float = ALPHA_US,
+        hop_us: float = HOP_US,
+        link_gbps: float = LINK_GBPS,
+    ) -> dict:
+        """Alpha-beta-hop price: per round one collective launch (alpha),
+        payload serialization at link bandwidth, and the longest transfer's
+        fall-through latency; ``link_bytes`` is total payload-hops moved."""
+        time_us = 0.0
+        for rh in self.hops:
+            ser_us = payload_bytes / (link_gbps * 1e3)
+            time_us += alpha_us + ser_us + hop_us * max(rh, default=0)
+        return {
+            "rounds": self.num_rounds,
+            "time_us": time_us,
+            "link_bytes": payload_bytes * self.total_hops,
+        }
+
+
+def _relay_edges(p: MulticastPlan) -> list[tuple[Coord, Coord, int]]:
+    """Decompose a plan into (holder, receiver, hops-along-path) edges.
+
+    A path-based multicast delivers in path order, so each delivery can be
+    served by the previous delivery point (or the injection node) relaying
+    the payload — the store-and-forward rendering of one wormhole worm.
+    Child paths (DPM MU-mode re-injection) start at the representative,
+    which the parent path has already delivered to.
+    """
+    edges: list[tuple[Coord, Coord, int]] = []
+    for path in p.paths:
+        holder, hpos = path.hops[0], 0
+        for d in path.deliveries:
+            pos = next(
+                i for i in range(hpos, len(path.hops)) if path.hops[i] == d
+            )
+            if d != holder:
+                edges.append((holder, d, pos - hpos))
+            holder, hpos = d, pos
+    return edges
+
+
+def plan_torus_multicast(
+    t: Torus, src: Coord, dests: list[Coord], algo: str = "DPM"
+) -> MulticastPlan:
+    """DPM partitioning (Algorithm 1) reused on torus geometry.
+
+    Returns the same MulticastPlan structure the NoC simulator consumes;
+    paths take shortest wraparound legs and partitions are the torus wedges.
+    """
+    return plan(algo, t, src, list(dests))
+
+
+def schedule_multicasts(
+    topo: Torus, requests: list[tuple[Coord, list[Coord]]], algo: str = "DPM"
+) -> Schedule:
+    """Schedule a batch of concurrent multicasts as ppermute rounds.
+
+    ``requests`` is a list of ``(src, dests)`` coordinate pairs on ``topo``.
+    Payload identity is per-request: a node forwards request r only after an
+    earlier round delivered r to it. Rounds are packed greedily in plan
+    order, one send and one receive per rank per round.
+    """
+    have: list[set[int]] = []
+    pend: list[tuple[int, int, int, int]] = []  # (req, sender, receiver, hops)
+    for rid, (src, dests) in enumerate(requests):
+        p = plan_torus_multicast(topo, src, dests, algo)
+        src_i = topo.idx(src)
+        have.append({src_i})
+        targeted: set[int] = set()
+        for s, d, h in _relay_edges(p):
+            si, di = topo.idx(s), topo.idx(d)
+            if di in targeted or di == src_i:
+                continue  # already served by an earlier edge of this request
+            targeted.add(di)
+            pend.append((rid, si, di, h))
+
+    rounds: list[list[tuple[int, int]]] = []
+    hops: list[list[int]] = []
+    round_reqs: list[list[int]] = []
+    while pend:
+        used_s: set[int] = set()
+        used_d: set[int] = set()
+        rnd: list[tuple[int, int]] = []
+        rh: list[int] = []
+        rr: list[int] = []
+        nxt: list[tuple[int, int, int, int]] = []
+        for e in pend:
+            rid, s, d, h = e
+            if s in have[rid] and s not in used_s and d not in used_d:
+                used_s.add(s)
+                used_d.add(d)
+                rnd.append((s, d))
+                rh.append(h)
+                rr.append(rid)
+            else:
+                nxt.append(e)
+        if not rnd:  # cannot happen: every chain is rooted at a source
+            raise RuntimeError("multicast schedule stalled")
+        for rid, (_, d) in zip(rr, rnd):
+            have[rid].add(d)
+        rounds.append(rnd)
+        hops.append(rh)
+        round_reqs.append(rr)
+        pend = nxt
+    return Schedule(topo.num_nodes, rounds, hops, round_reqs)
+
+
+def dp_broadcast_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
+    """Broadcast rank 0 -> all ranks on a 1-D ring (a data-parallel axis).
+
+    The ring is ``Torus(num_ranks, 1)``; with DPM the destination set splits
+    into the two ring directions and each side is a relay chain, roughly
+    halving the rounds of MU's one-send-per-round direct scheme.
+    """
+    ring = torus(num_ranks, 1)
+    dests = [(i, 0) for i in range(1, num_ranks)]
+    return schedule_multicasts(ring, [((0, 0), dests)], algo)
+
+
+def apply_schedule(x: jax.Array, sched: Schedule, axis_name: str) -> jax.Array:
+    """Execute a Schedule on a shard_map-local array: one ppermute per
+    round; receivers adopt the incoming payload, all other ranks keep
+    theirs. Only meaningful for single-request (broadcast-like) schedules,
+    where every transfer carries the same logical payload."""
+    idx = jax.lax.axis_index(axis_name)
+    for rnd in sched.rounds:
+        y = jax.lax.ppermute(x, axis_name, perm=list(rnd))
+        recv = jnp.zeros((), dtype=bool)
+        for _, d in rnd:
+            recv = recv | (idx == d)
+        x = jnp.where(recv, y, x)
+    return x

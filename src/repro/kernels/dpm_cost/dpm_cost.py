@@ -5,8 +5,12 @@ This is the paper's planner compute, vectorized over many multicast requests
 per step). For a tile of packets the kernel evaluates all 24 candidate
 partitions (8 basic + 8 pairs + 8 triples of consecutive partitions):
 
-    rep[c]  = argmin_{d in cand} (manhattan(S, d), label(d))   (Definition 1)
-    cost[c] = sum_{d in cand} manhattan(rep, d) [+ |S->rep|]   (C_t of Def. 2)
+    rep[c]  = argmin_{d in cand} (dist(S, d), label(d))        (Definition 1)
+    cost[c] = sum_{d in cand} dist(rep, d) [+ |S->rep|]        (C_t of Def. 2)
+
+where dist is Manhattan on the mesh and toroidal Manhattan under ``wrap=True``
+(the Torus geometry — partitions become signed shortest-displacement wedges,
+matching repro.core.partition.basic_partitions on a Torus exactly).
 
 The dual-path cost C_p needs a sequential path walk and stays host-side
 (repro.core); MU-cost planning is exact for partitions where MU wins (the
@@ -33,7 +37,23 @@ CANDS: list[tuple[int, ...]] = (
 BIG = 1 << 20
 
 
-def _kernel(mask_ref, sxy_ref, cost_ref, rep_ref, *, n: int, m: int, leg: bool):
+def _ring_delta(d, size: int, wrap: bool):
+    """Signed shortest displacement per ring dimension, vectorized.
+
+    ``wrap=False`` is the identity (mesh). ``wrap=True`` maps into
+    [-size//2, (size-1)//2] with half-way ties negative. The expression must
+    stay bit-identical to core.topology.ring_delta (jnp ``%`` is floor-mod,
+    like Python's) or host and kernel partitions diverge; parity is pinned by
+    tests/test_topology.py.
+    """
+    if not wrap or size <= 1:
+        return d
+    return (d + size // 2) % size - size // 2
+
+
+def _kernel(
+    mask_ref, sxy_ref, cost_ref, rep_ref, *, n: int, m: int, leg: bool, wrap: bool
+):
     NN = n * m
     node = jax.lax.iota(jnp.int32, NN)
     xs = node % n  # row-major node index
@@ -44,19 +64,19 @@ def _kernel(mask_ref, sxy_ref, cost_ref, rep_ref, *, n: int, m: int, leg: bool):
     sx = sxy_ref[:, 0:1]  # (TP, 1)
     sy = sxy_ref[:, 1:2]
 
-    gx = xs[None, :] > sx
-    lx = xs[None, :] < sx
-    ex = xs[None, :] == sx
-    gy = ys[None, :] > sy
-    ly = ys[None, :] < sy
-    ey = ys[None, :] == sy
+    # signed shortest displacement source -> node (plain difference on the
+    # mesh, shortest way around each ring on the torus)
+    dxs = _ring_delta(xs[None, :] - sx, n, wrap)  # (TP, NN)
+    dys = _ring_delta(ys[None, :] - sy, m, wrap)
+    gx, lx, ex = dxs > 0, dxs < 0, dxs == 0
+    gy, ly, ey = dys > 0, dys < 0, dys == 0
     # P0..P7 counter-clockwise from the upper-right quadrant (Fig. 2a)
     parts = [
         gx & gy, ex & gy, lx & gy, lx & ey,
         lx & ly, ex & ly, gx & ly, gx & ey,
     ]
 
-    dsrc = jnp.abs(xs[None, :] - sx) + jnp.abs(ys[None, :] - sy)  # (TP, NN)
+    dsrc = jnp.abs(dxs) + jnp.abs(dys)  # (TP, NN) (toroidal) Manhattan
 
     for ci, ids in enumerate(CANDS):
         cm = parts[ids[0]]
@@ -69,12 +89,14 @@ def _kernel(mask_ref, sxy_ref, cost_ref, rep_ref, *, n: int, m: int, leg: bool):
         rep = jnp.argmin(key, axis=1).astype(jnp.int32)  # (TP,)
         rx = rep % n
         ry = rep // n
-        drep = jnp.abs(xs[None, :] - rx[:, None]) + jnp.abs(
-            ys[None, :] - ry[:, None]
+        drep = jnp.abs(_ring_delta(xs[None, :] - rx[:, None], n, wrap)) + jnp.abs(
+            _ring_delta(ys[None, :] - ry[:, None], m, wrap)
         )
         ct = jnp.sum(jnp.where(sel, drep, 0), axis=1).astype(jnp.int32)
         if leg:
-            sleg = jnp.abs(rx - sx[:, 0]) + jnp.abs(ry - sy[:, 0])
+            sleg = jnp.abs(_ring_delta(rx - sx[:, 0], n, wrap)) + jnp.abs(
+                _ring_delta(ry - sy[:, 0], m, wrap)
+            )
             ct = ct + sleg
         cost_ref[:, ci] = jnp.where(any_sel, ct, 0)
         rep_ref[:, ci] = jnp.where(any_sel, rep, -1)
@@ -86,10 +108,13 @@ def dpm_cost_table(
     *,
     n: int,
     m: int | None = None,
+    wrap: bool = False,
     include_source_leg: bool = True,
     tile: int = 128,
     interpret: bool = False,
 ):
+    """Batched candidate cost tables; ``wrap=True`` computes toroidal
+    Manhattan distances and wedge partitions (the Torus geometry)."""
     m = m or n
     P, NN = dest_mask.shape
     assert NN == n * m
@@ -98,7 +123,9 @@ def dpm_cost_table(
         dest_mask = jnp.pad(dest_mask, [(0, pad), (0, 0)])
         src_xy = jnp.pad(src_xy, [(0, pad), (0, 0)])
     Pp = P + pad
-    kernel = functools.partial(_kernel, n=n, m=m, leg=include_source_leg)
+    kernel = functools.partial(
+        _kernel, n=n, m=m, leg=include_source_leg, wrap=wrap
+    )
     costs, reps = pl.pallas_call(
         kernel,
         grid=(Pp // tile,),

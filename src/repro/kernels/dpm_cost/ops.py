@@ -27,7 +27,7 @@ def _on_cpu() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "m", "include_source_leg", "interpret")
+    jax.jit, static_argnames=("n", "m", "wrap", "include_source_leg", "interpret")
 )
 def dpm_plan(
     dest_mask: jax.Array,  # (P, NN)
@@ -35,11 +35,13 @@ def dpm_plan(
     *,
     n: int,
     m: int | None = None,
+    wrap: bool = False,
     include_source_leg: bool = True,
     interpret: bool | None = None,
 ):
     """Algorithm 1 (greedy partition merging), batched. Returns
-    (chosen (P,24) bool, costs (P,24) int32, reps (P,24) int32)."""
+    (chosen (P,24) bool, costs (P,24) int32, reps (P,24) int32).
+    ``wrap=True`` plans on torus geometry (toroidal distances/partitions)."""
     if interpret is None:
         interpret = _on_cpu()
     costs, reps = dpm_cost_table(
@@ -47,6 +49,7 @@ def dpm_plan(
         src_xy,
         n=n,
         m=m,
+        wrap=wrap,
         include_source_leg=include_source_leg,
         interpret=interpret,
     )

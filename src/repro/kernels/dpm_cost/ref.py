@@ -3,10 +3,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .dpm_cost import BIG, CANDS
+from .dpm_cost import BIG, CANDS, _ring_delta
 
 
-def dpm_cost_table_ref(dest_mask, src_xy, *, n, m=None, include_source_leg=True):
+def dpm_cost_table_ref(
+    dest_mask, src_xy, *, n, m=None, wrap=False, include_source_leg=True
+):
     m = m or n
     P, NN = dest_mask.shape
     node = jnp.arange(NN, dtype=jnp.int32)
@@ -14,13 +16,15 @@ def dpm_cost_table_ref(dest_mask, src_xy, *, n, m=None, include_source_leg=True)
     blabel = jnp.where(ys % 2 == 0, ys * n + xs, ys * n + (n - 1 - xs))
     dm = dest_mask.astype(jnp.int32)
     sx, sy = src_xy[:, 0:1], src_xy[:, 1:2]
-    gx, lx, ex = xs[None] > sx, xs[None] < sx, xs[None] == sx
-    gy, ly, ey = ys[None] > sy, ys[None] < sy, ys[None] == sy
+    dxs = _ring_delta(xs[None] - sx, n, wrap)
+    dys = _ring_delta(ys[None] - sy, m, wrap)
+    gx, lx, ex = dxs > 0, dxs < 0, dxs == 0
+    gy, ly, ey = dys > 0, dys < 0, dys == 0
     parts = [
         gx & gy, ex & gy, lx & gy, lx & ey,
         lx & ly, ex & ly, gx & ly, gx & ey,
     ]
-    dsrc = jnp.abs(xs[None] - sx) + jnp.abs(ys[None] - sy)
+    dsrc = jnp.abs(dxs) + jnp.abs(dys)
     costs, reps = [], []
     for ids in CANDS:
         cm = parts[ids[0]]
@@ -31,10 +35,14 @@ def dpm_cost_table_ref(dest_mask, src_xy, *, n, m=None, include_source_leg=True)
         key = jnp.where(sel, dsrc * BIG + blabel[None], jnp.int32(2**30))
         rep = jnp.argmin(key, 1).astype(jnp.int32)
         rx, ry = rep % n, rep // n
-        drep = jnp.abs(xs[None] - rx[:, None]) + jnp.abs(ys[None] - ry[:, None])
+        drep = jnp.abs(_ring_delta(xs[None] - rx[:, None], n, wrap)) + jnp.abs(
+            _ring_delta(ys[None] - ry[:, None], m, wrap)
+        )
         ct = jnp.sum(jnp.where(sel, drep, 0), 1).astype(jnp.int32)
         if include_source_leg:
-            ct = ct + jnp.abs(rx - sx[:, 0]) + jnp.abs(ry - sy[:, 0])
+            ct = ct + jnp.abs(_ring_delta(rx - sx[:, 0], n, wrap)) + jnp.abs(
+                _ring_delta(ry - sy[:, 0], m, wrap)
+            )
         costs.append(jnp.where(any_sel, ct, 0))
         reps.append(jnp.where(any_sel, rep, -1))
     return jnp.stack(costs, 1), jnp.stack(reps, 1)

@@ -26,6 +26,7 @@ class NoCConfig:
 
     n: int = 8  # 8x8 mesh
     m: int | None = None
+    topology: str = "mesh"  # "mesh" | "torus" (core.topology.make_topology)
     vcs_per_class: int = 2  # 4 VCs total: 2 high-channel + 2 low-channel
     buffer_depth: int = 4  # flits per VC FIFO
     flits_per_packet: int = 4

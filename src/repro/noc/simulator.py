@@ -12,7 +12,11 @@ need — see DESIGN.md §2 fidelity notes):
   when the tail flit leaves that FIFO. Each physical directed link carries
   ``vcs_per_class`` high-channel and ``vcs_per_class`` low-channel VCs; a hop
   uses the high class iff the boustrophedon label increases on that hop (the
-  paper's deadlock rule, applied to unicast and multicast alike).
+  paper's deadlock rule, applied to unicast and multicast alike). The rule is
+  derived from the topology's label order, so it applies unchanged on a
+  torus: wrap hops are classified by their label delta like any other hop
+  (the snake's closing wrap link is a LOW hop; see DESIGN.md §3 for the
+  deadlock-fidelity caveat on torus XY routes).
 * Bandwidth: one flit per directed physical link per cycle, age-based (oldest
   enqueue first) arbitration; one flit per node per cycle ejection.
 * Path-based multicast delivery: a copy is absorbed when the **tail** flit
@@ -25,8 +29,9 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
-from ..core.grid import Coord, MeshGrid, grid
+from ..core.grid import Coord, MeshGrid
 from ..core.planner import MulticastPlan
+from ..core.topology import make_topology
 from .config import NoCConfig
 
 HIGH, LOW = 0, 1
@@ -93,7 +98,7 @@ class SimStats:
 class WormholeSim:
     def __init__(self, cfg: NoCConfig, measure_window: tuple[int, int] | None = None):
         self.cfg = cfg
-        self.g: MeshGrid = grid(cfg.n, cfg.m)
+        self.g: MeshGrid = make_topology(cfg.topology, cfg.n, cfg.m)
         self.packets: list[_Pkt] = []
         self.fifos: dict[Link, list[deque]] = {}  # link -> per-VC FIFOs
         self.vc_owner: dict[tuple[Link, int], int] = {}

@@ -13,7 +13,8 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
-from ..core.grid import Coord, grid
+from ..core.grid import Coord
+from ..core.topology import make_topology
 from ..core.planner import plan
 from .config import NoCConfig
 from .simulator import SimStats, WormholeSim
@@ -44,7 +45,7 @@ def synthetic_workload(
     mc = cfg.multicast_fraction if multicast_fraction is None else multicast_fraction
     lo, hi = cfg.dest_range if dest_range is None else dest_range
     rng = random.Random(seed)
-    g = grid(cfg.n, cfg.m)
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
     nodes = [(x, y) for y in range(g.rows) for x in range(g.n)]
     reqs: list[Request] = []
     for t in range(cycles):
@@ -90,7 +91,7 @@ def parsec_workload(
 ) -> Workload:
     rel_load, mc, dr, burst_p, burst_len = PARSEC_PROFILES[benchmark]
     rng = random.Random(seed ^ hash(benchmark) & 0xFFFF)
-    g = grid(cfg.n, cfg.m)
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
     nodes = [(x, y) for y in range(g.rows) for x in range(g.n)]
     rate = base_rate * rel_load
     reqs: list[Request] = []
@@ -126,7 +127,7 @@ def simulate(
     drain_grace: int = 3000,
 ) -> SimStats:
     """Run one workload under one algorithm; measure post-warmup packets."""
-    g = grid(cfg.n, cfg.m)
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
     sim = WormholeSim(cfg, measure_window=(warmup, workload.horizon))
     for r in workload.requests:
         sim.add_plan(plan(algo, g, r.src, r.dests), r.time)

@@ -1,0 +1,80 @@
+"""Test-suite bootstrap: minimal `hypothesis` fallback.
+
+requirements-dev.txt installs the real hypothesis; some minimal containers
+(CPU-only CI images, the repro sandbox) don't have it. Rather than skip the
+property tests there, install a tiny shim implementing exactly the subset
+this suite uses — @given/@settings and strategies.integers/tuples/lists —
+with seeded random sampling. Less exhaustive than real hypothesis (no
+shrinking, no database), but the properties still get hundreds of examples.
+
+The shim registers in sys.modules only when the real package is absent, so
+environments with hypothesis installed are untouched.
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:  # pragma: no cover - env-dependent
+    import functools
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, gen):
+            self.gen = gen
+
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.gen(rng) for s in strategies))
+
+    def lists(elem: _Strategy, min_size=0, max_size=10, unique=False) -> _Strategy:
+        def gen(rng):
+            k = rng.randint(min_size, max_size)
+            if not unique:
+                return [elem.gen(rng) for _ in range(k)]
+            out, seen = [], set()
+            for _ in range(100 * max(1, k)):
+                v = elem.gen(rng)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+                if len(out) == k:
+                    break
+            return out
+
+        return _Strategy(gen)
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(
+                    wrapper, "_max_examples", getattr(fn, "_max_examples", 100)
+                )
+                rng = random.Random(fn.__name__)  # deterministic per test
+                for _ in range(n):
+                    fn(*(s.gen(rng) for s in strategies))
+
+            # wraps() copies __wrapped__, which would make pytest read the
+            # original (src, dests, ...) signature and hunt for fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples: int = 100, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers, st_mod.tuples, st_mod.lists = integers, tuples, lists
+    mod.given, mod.settings, mod.strategies = given, settings, st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
