@@ -1,0 +1,76 @@
+"""Beyond-paper: alpha-beta cost of DPM vs ring scheduling for the two
+collectives the distribution layer actually issues — the data-parallel
+parameter broadcast (repro.dist.multicast.dp_broadcast_schedule) and the
+expert-parallel dispatch all-to-all (repro.dist.ep) — at n in {8, 16, 64}
+ranks.
+
+Broadcast moves one 64 MiB payload; the EP dispatch moves one (src, dst)
+chunk per rank pair, sized so the whole token buffer is 64 MiB (chunk =
+total / n), priced per-request via Schedule.cost(req_payload_bytes=...).
+Results also append to benchmarks/results/dist_collectives.json so the
+numbers sit alongside the torus planner suite's artifacts.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.dist.multicast import (
+    alltoall_schedule,
+    dp_broadcast_schedule,
+    ring_alltoall_schedule,
+    ring_broadcast_schedule,
+)
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+PAYLOAD = 64 * 2**20
+
+
+def run(quick: bool = False):
+    rows = []
+    results: dict[str, dict] = {}
+    sizes = (8, 16) if quick else (8, 16, 64)
+    for n in sizes:
+        t0 = time.monotonic()
+        cases = {
+            "bcast_dpm": dp_broadcast_schedule(n, "DPM").cost(PAYLOAD),
+            "bcast_mu": dp_broadcast_schedule(n, "MU").cost(PAYLOAD),
+            "bcast_ring": ring_broadcast_schedule(n).cost(PAYLOAD),
+        }
+        chunk = PAYLOAD // n
+        a_dpm = alltoall_schedule(n, "DPM")
+        a_ring = ring_alltoall_schedule(n)
+        req = {r: chunk for rr in a_dpm.round_reqs for r in rr}
+        cases["ep_dispatch_dpm"] = a_dpm.cost(chunk, req_payload_bytes=req)
+        cases["ep_dispatch_ring"] = a_ring.cost(chunk, req_payload_bytes=req)
+        plan_us = (time.monotonic() - t0) * 1e6
+        results[str(n)] = cases
+        for name, c in cases.items():
+            rows.append(
+                (
+                    f"dist_collectives/{name}/n{n}",
+                    c["time_us"],
+                    f"rounds={c['rounds']};link_MiB={c['link_bytes'] / 2**20:.0f}",
+                )
+            )
+        rows.append((f"dist_collectives/plan/n{n}", plan_us, "planning wall"))
+        for kind in ("bcast", "ep_dispatch"):
+            dpm = cases[f"{kind}_dpm"]["time_us"]
+            ring = cases[f"{kind}_ring"]["time_us"]
+            rows.append(
+                (
+                    f"dist_collectives/{kind}_speedup/n{n}",
+                    0.0,
+                    f"ring_over_dpm={ring / max(dpm, 1e-9):.3f}",
+                )
+            )
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "dist_collectives.json"
+    merged = {}
+    if out.exists():
+        merged = json.loads(out.read_text())
+    merged.update(results)
+    out.write_text(json.dumps(merged, indent=1, sort_keys=True))
+    return rows

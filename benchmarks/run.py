@@ -17,11 +17,13 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma-separated module names (fig6,fig7,fig8,partition,tpu,torus,kernels)",
+        help="comma-separated module names "
+        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist)",
     )
     args = ap.parse_args()
 
     from . import (
+        dist_collectives,
         fig6_latency,
         fig7_power,
         fig8_traces,
@@ -39,6 +41,7 @@ def main() -> None:
         "tpu": tpu_multicast.run,
         "torus": torus_planner.run,
         "kernels": kernels_micro.run,
+        "dist": dist_collectives.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

@@ -5,6 +5,7 @@
 1. Partitions a multicast destination set with Algorithm 1 (vs MU/MP/NMP).
 2. Runs the flit-level wormhole simulator on the resulting plans.
 3. Plans the same multicast on a 16x16 TPU-pod torus as ppermute rounds.
+4. Resolves model sharding rules and the DPM-planned EP dispatch schedule.
 """
 import random
 
@@ -52,3 +53,23 @@ for algo in ("MU", "DPM"):
         f"  {algo:4s} {c['rounds']:3d} ppermute rounds, "
         f"~{c['time_us']:.0f} us, {c['link_bytes'] / 2**20:.0f} MiB-hops"
     )
+
+# --- 4. the distribution layer --------------------------------------------
+from repro.dist.multicast import alltoall_schedule  # noqa: E402
+from repro.dist.sharding import abstract_mesh, spec_for_shape  # noqa: E402
+
+mesh = abstract_mesh(("data", 16), ("model", 16))
+print("\nsharding rules on a 16x16 (data, model) mesh:")
+for axes, shape in (
+    (("batch", "seq", "embed"), (256, 4096, 2048)),
+    (("experts", "embed", "expert_mlp"), (64, 2048, 1408)),
+    (("vocab", "embed"), (163840, 2048)),
+):
+    print(f"  {axes} {shape} -> {spec_for_shape(axes, shape, mesh)}")
+
+sched = alltoall_schedule(16, "DPM")
+c = sched.cost(4 * 2**20, req_payload_bytes={})
+print(
+    f"\nEP dispatch all-to-all, 16 expert shards (4 MiB chunks): "
+    f"{c['rounds']} ppermute rounds, ~{c['time_us']:.0f} us"
+)

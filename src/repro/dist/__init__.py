@@ -1,25 +1,62 @@
 """Distribution layer: collective scheduling on accelerator interconnects.
 
 ``repro.dist.multicast`` turns the paper's DPM partitioning into a
-round-based ppermute scheduler for torus/ring collectives (DESIGN.md §3).
+round-based ppermute scheduler for torus/ring collectives (DESIGN.md §3);
+the remaining submodules are the model-side consumers (DESIGN.md §4):
 
-Other submodules referenced by the launch layer (``sharding``, ``ep``,
-``pipeline``, ``compress``) are planned and land in later PRs.
+* ``sharding``  — logical-axis -> mesh-axis rule tables and the
+  spec/tree/param/ZeRO-1 sharding builders the launch layer compiles with;
+* ``ep``        — shard_map expert-parallel MoE whose all-to-all dispatch
+  and combine ride DPM-planned ppermute rounds;
+* ``pipeline``  — GPipe microbatch pipeline over a ``pipe`` mesh axis with
+  ppermute stage handoffs;
+* ``compress``  — int8 reduce-scatter + all-gather gradient all-reduce
+  with error feedback.
 """
+from .compress import compressed_psum
+from .ep import moe_apply_ep
 from .multicast import (
     Schedule,
     Torus,
+    alltoall_schedule,
+    apply_alltoall_schedule,
     apply_schedule,
     dp_broadcast_schedule,
     plan_torus_multicast,
+    ring_alltoall_schedule,
+    ring_broadcast_schedule,
     schedule_multicasts,
+)
+from .pipeline import pipeline_apply
+from .sharding import (
+    CACHE_RULES,
+    DEFAULT_RULES,
+    SEQ_RULES,
+    param_shardings,
+    spec_for_shape,
+    tree_shardings,
+    zero1_shardings,
 )
 
 __all__ = [
+    "CACHE_RULES",
+    "DEFAULT_RULES",
+    "SEQ_RULES",
     "Schedule",
     "Torus",
+    "alltoall_schedule",
+    "apply_alltoall_schedule",
     "apply_schedule",
+    "compressed_psum",
     "dp_broadcast_schedule",
+    "moe_apply_ep",
+    "param_shardings",
+    "pipeline_apply",
     "plan_torus_multicast",
+    "ring_alltoall_schedule",
+    "ring_broadcast_schedule",
     "schedule_multicasts",
+    "spec_for_shape",
+    "tree_shardings",
+    "zero1_shardings",
 ]

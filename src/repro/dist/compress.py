@@ -1,0 +1,65 @@
+"""Compressed gradient all-reduce: int8 reduce-scatter + all-gather with
+error feedback.
+
+``compressed_psum`` replaces a ``lax.psum`` of large f32 gradients with
+two int8 exchange stages, cutting collective bytes ~4x:
+
+1. the error-compensated gradient (``g + err``) splits into one chunk per
+   rank, each quantized to int8 with a per-chunk f32 scale; chunks
+   exchange (reduce-scatter) and every rank dequantizes and accumulates
+   its owned chunk in f32;
+2. the reduced chunk re-quantizes once and all-gathers back.
+
+The local quantization residual from stage 1 is returned as the new
+error-feedback state — carrying it into the next call makes the
+compression error *accumulate-free* (1-bit/int8 SGD style) instead of
+biasing the trajectory.  RunConfig.grad_compress="int8" is the launch-
+layer knob that selects this path for DP gradient reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Rowwise symmetric int8: returns (q int8, scale f32 keepdims)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(
+    g: jax.Array, err: jax.Array, axis_name: str
+) -> tuple[jax.Array, jax.Array]:
+    """int8 RS+AG all-reduce of ``g`` over ``axis_name`` with error
+    feedback state ``err`` (same shape as ``g``; start with zeros).
+
+    Returns ``(sum_approx, new_err)`` where ``sum_approx ~= lax.psum(g)``
+    and ``new_err`` is this rank's stage-1 quantization residual to feed
+    into the next call.  Must run inside shard_map over ``axis_name``.
+    """
+    n = jax.lax.psum(1, axis_name)
+    flat = (g + err).astype(jnp.float32).reshape(-1)
+    length = flat.shape[0]
+    pad = (-length) % n
+    v = jnp.pad(flat, (0, pad))
+    chunks = v.reshape(n, v.shape[0] // n)  # chunk j is owned by rank j
+
+    q, scale = _quantize_int8(chunks)
+    dq = q.astype(jnp.float32) * scale
+    new_err = (v - dq.reshape(-1))[:length].reshape(g.shape).astype(g.dtype)
+
+    # reduce-scatter: every rank collects the int8 chunks addressed to it
+    # (one per peer), dequantizes with the matching scales, sums in f32
+    qt = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0)
+    st = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0)
+    owned = jnp.sum(qt.astype(jnp.float32) * st, axis=0)
+
+    # all-gather the re-quantized reduced chunks
+    q2, s2 = _quantize_int8(owned[None])
+    allq = jax.lax.all_gather(q2[0], axis_name)
+    alls = jax.lax.all_gather(s2[0, 0], axis_name)
+    total = (allq.astype(jnp.float32) * alls[:, None]).reshape(-1)[:length]
+    return total.reshape(g.shape).astype(g.dtype), new_err

@@ -23,10 +23,12 @@ prices a schedule with an alpha-beta-hop model for benchmark comparisons.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.grid import Coord
 from ..core.planner import MulticastPlan, plan
@@ -72,18 +74,35 @@ class Schedule:
         alpha_us: float = ALPHA_US,
         hop_us: float = HOP_US,
         link_gbps: float = LINK_GBPS,
+        req_payload_bytes: dict[int, int] | None = None,
     ) -> dict:
         """Alpha-beta-hop price: per round one collective launch (alpha),
         payload serialization at link bandwidth, and the longest transfer's
-        fall-through latency; ``link_bytes`` is total payload-hops moved."""
+        fall-through latency; ``link_bytes`` is total payload-hops moved.
+
+        ``req_payload_bytes`` maps request index -> per-transfer bytes for
+        schedules whose requests carry different payloads (an expert-
+        parallel all-to-all moves one chunk per (src, dst) pair, not the
+        full buffer); round serialization is then the round's largest
+        transfer and unmapped requests fall back to ``payload_bytes``.
+        """
         time_us = 0.0
-        for rh in self.hops:
-            ser_us = payload_bytes / (link_gbps * 1e3)
+        link_bytes = 0.0
+        reqs = self.round_reqs or [[] for _ in self.hops]
+        for rh, rr in zip(self.hops, reqs):
+            if req_payload_bytes is None or len(rr) != len(rh):
+                # no (usable) request attribution: uniform payload per
+                # transfer, so a missing round_reqs can't drop transfers
+                sizes = [payload_bytes] * len(rh)
+            else:
+                sizes = [req_payload_bytes.get(r, payload_bytes) for r in rr]
+            ser_us = max(sizes, default=payload_bytes) / (link_gbps * 1e3)
             time_us += alpha_us + ser_us + hop_us * max(rh, default=0)
+            link_bytes += sum(b * h for b, h in zip(sizes, rh))
         return {
             "rounds": self.num_rounds,
             "time_us": time_us,
-            "link_bytes": payload_bytes * self.total_hops,
+            "link_bytes": link_bytes,
         }
 
 
@@ -187,6 +206,68 @@ def dp_broadcast_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
     return schedule_multicasts(ring, [((0, 0), dests)], algo)
 
 
+def ring_broadcast_schedule(num_ranks: int) -> Schedule:
+    """Baseline store-and-forward ring broadcast: rank 0's payload relays
+    neighbor-to-neighbor, one 1-hop transfer per round, ``n - 1`` rounds."""
+    rounds = [[(i, i + 1)] for i in range(num_ranks - 1)]
+    hops = [[1] for _ in range(num_ranks - 1)]
+    reqs = [[0] for _ in range(num_ranks - 1)]
+    return Schedule(num_ranks, rounds, hops, reqs)
+
+
+def _a2a_req(num_ranks: int, rid: int) -> tuple[int, int]:
+    """Request index -> (src, dst) for the all-to-all request ordering."""
+    src, k = divmod(rid, num_ranks - 1)
+    dst = k if k < src else k + 1
+    return src, dst
+
+
+def a2a_req_id(num_ranks: int, src: int, dst: int) -> int:
+    """(src, dst) -> request index (inverse of ``_a2a_req``)."""
+    return src * (num_ranks - 1) + (dst if dst < src else dst - 1)
+
+
+@functools.lru_cache(maxsize=None)
+def alltoall_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
+    """All-to-all on a 1-D ring as DPM-planned ppermute rounds.
+
+    Each of the ``n(n-1)`` (src, dst) chunks is its own unicast request (a
+    chunk is a *distinct* payload, so relay chains cannot serve it); the
+    planner contributes the wraparound shortest-path hop counts and the
+    greedy packer fills rounds under the ppermute constraint.  Request
+    indices follow ``a2a_req_id`` so executors can recover (src, dst).
+
+    Every transfer is asserted to originate at its request's source —
+    the property ``repro.dist.ep`` relies on to ship each chunk directly.
+    """
+    ring = torus(num_ranks, 1)
+    requests = [
+        ((src, 0), [(dst, 0)])
+        for rid in range(num_ranks * (num_ranks - 1))
+        for src, dst in [_a2a_req(num_ranks, rid)]
+    ]
+    sched = schedule_multicasts(ring, requests, algo)
+    for rnd, rr in zip(sched.rounds, sched.round_reqs):
+        for (s, d), rid in zip(rnd, rr):
+            src, dst = _a2a_req(num_ranks, rid)
+            assert (s, d) == (src, dst), (s, d, src, dst)
+    return sched
+
+
+def ring_alltoall_schedule(num_ranks: int) -> Schedule:
+    """Baseline shift all-to-all: round ``r`` is the +r rotation, every
+    transfer walking the full ``r`` hops one way around the ring (no
+    wraparound shortcut — the classic ring-shift collective)."""
+    rounds, hops, reqs = [], [], []
+    for r in range(1, num_ranks):
+        rounds.append([(i, (i + r) % num_ranks) for i in range(num_ranks)])
+        hops.append([r] * num_ranks)
+        reqs.append(
+            [a2a_req_id(num_ranks, i, (i + r) % num_ranks) for i in range(num_ranks)]
+        )
+    return Schedule(num_ranks, rounds, hops, reqs)
+
+
 def apply_schedule(x: jax.Array, sched: Schedule, axis_name: str) -> jax.Array:
     """Execute a Schedule on a shard_map-local array: one ppermute per
     round; receivers adopt the incoming payload, all other ranks keep
@@ -200,3 +281,39 @@ def apply_schedule(x: jax.Array, sched: Schedule, axis_name: str) -> jax.Array:
             recv = recv | (idx == d)
         x = jnp.where(recv, y, x)
     return x
+
+
+def apply_alltoall_schedule(
+    chunks: jax.Array, sched: Schedule, axis_name: str
+) -> jax.Array:
+    """Execute an ``alltoall_schedule`` on shard_map-local chunks.
+
+    ``chunks[j]`` is this rank's payload for rank ``j``; the result's row
+    ``i`` is the chunk rank ``i`` addressed to this rank.  Each round maps
+    to one ``jax.lax.ppermute``: senders select the chunk for their round
+    receiver, receivers store the incoming chunk under the sender's slot
+    (the schedule guarantees direct src->dst transfers, so a sender always
+    holds what it sends).
+    """
+    n = sched.num_ranks
+    assert chunks.shape[0] == n, (chunks.shape, n)
+    idx = jax.lax.axis_index(axis_name)
+    slots = jnp.arange(n)
+    out = jnp.where(
+        (slots == idx).reshape((n,) + (1,) * (chunks.ndim - 1)), chunks, 0
+    )
+    for rnd in sched.rounds:
+        send_to = np.zeros(n, np.int32)  # chunk index each sender ships
+        recv_from = np.zeros(n, np.int32)  # slot each receiver stores into
+        is_recv = np.zeros(n, bool)
+        for s, d in rnd:
+            send_to[s] = d
+            recv_from[d] = s
+            is_recv[d] = True
+        payload = jnp.take(chunks, jnp.asarray(send_to)[idx], axis=0)
+        y = jax.lax.ppermute(payload, axis_name, perm=list(rnd))
+        store = (slots == jnp.asarray(recv_from)[idx]) & jnp.asarray(is_recv)[idx]
+        out = jnp.where(
+            store.reshape((n,) + (1,) * (chunks.ndim - 1)), y[None], out
+        )
+    return out

@@ -1,0 +1,196 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §4).
+
+Every parameter/activation/cache array in the model carries a tuple of
+logical axis names (repro/models/layers.py).  This module maps those names
+onto mesh axes through *rule tables*: ``rules[logical] = (candidate, ...)``
+where each candidate is a tuple of mesh axes to co-shard that dimension
+over.  Candidates are tried in order (lookup precedence) and one is taken
+iff
+
+* every mesh axis of the candidate exists in the mesh (so ``("pod",
+  "data")`` naturally degrades to the ``("data",)`` fallback on a
+  single-pod mesh),
+* none of its mesh axes is already used by an earlier dimension of the
+  same array (a mesh axis can shard at most one dim),
+* the product of the candidate's axis sizes is > 1 and divides the dim
+  (shape-aware calls only) — otherwise the dim falls back to replication.
+
+``zero1_shardings`` layers ZeRO-1 on top: each optimizer-state leaf gains
+one extra shard over the free data axes (first still-replicated dim whose
+size divides the data-parallel degree; leaves with no such dim keep the
+plain parameter sharding).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Rule tables.  Values are ordered candidate tuples; each candidate is the
+# tuple of mesh axes that dimension shards over.  Absent names (and None
+# placeholder entries in axis tuples) replicate.
+Rules = dict[str, tuple[tuple[str, ...], ...]]
+
+_DATA = (("pod", "data"), ("data",))
+_MODEL = (("model",),)
+
+DEFAULT_RULES: Rules = {
+    "batch": _DATA,
+    "seq": (),
+    "embed": (),
+    "heads": _MODEL,
+    "kv_heads": _MODEL,
+    "head_dim": (),
+    "mlp": _MODEL,
+    "vocab": _MODEL,
+    "experts": _MODEL,
+    "expert_mlp": (),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "qk_rope": (),
+    "kv_lora": (),
+    "q_lora": (),
+}
+
+# Sequence parallelism: the residual stream's seq dim takes the model axis;
+# a later dim wanting "model" (mlp/vocab) then replicates because the axis
+# is used — GSPMD re-shards at the matmul boundaries.
+SEQ_RULES: Rules = {**DEFAULT_RULES, "seq": _MODEL}
+
+# Decode caches: batch over the data axes, seq over model (the layout
+# launch/specs.py's HBM estimate assumes); head dims replicate.
+CACHE_RULES: Rules = {
+    **DEFAULT_RULES,
+    "seq": _MODEL,
+    "heads": (),
+    "kv_heads": (),
+}
+
+
+def abstract_mesh(*axes: tuple[str, int]):
+    """Device-free mesh of (name, size) axes for planning shardings.
+
+    Wraps the AbstractMesh constructor across its jax signature change
+    (<0.5 takes a shape tuple of pairs, newer takes (sizes, names)).
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(s for _, s in axes), tuple(n for n, _ in axes)
+        )
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _assign(
+    axes: tuple, shape: tuple | None, mesh, rules: Rules | None
+) -> list:
+    """Per-dimension mesh-axis assignment (the engine behind every public
+    helper).  ``shape`` entries of None skip the divisibility check."""
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = _axis_sizes(mesh)
+    if shape is None:
+        shape = (None,) * len(axes)
+    used: set[str] = set()
+    entries: list = []
+    for name, dim in zip(axes, shape):
+        assign = None
+        for cand in rules.get(name, ()) if name is not None else ():
+            if not cand or any(a not in sizes for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            n = math.prod(sizes[a] for a in cand)
+            if n <= 1:
+                continue
+            if dim is not None and dim % n != 0:
+                continue
+            assign = cand[0] if len(cand) == 1 else cand
+            used.update(cand)
+            break
+        entries.append(assign)
+    return entries
+
+
+def spec_for_shape(axes: tuple, shape: tuple, mesh, rules: Rules | None = None) -> P:
+    """Shape-aware PartitionSpec for one array: logical ``axes`` resolved
+    through ``rules`` with divisibility fallback to replication."""
+    return P(*_assign(axes, shape, mesh, rules))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def tree_shardings(specs, shapes, mesh, rules: Rules | None = None):
+    """NamedSharding pytree: ``specs`` leaves are logical-axis tuples,
+    ``shapes`` the matching ShapeDtypeStruct (or array) pytree."""
+
+    def one(axes, sds):
+        return NamedSharding(mesh, spec_for_shape(axes, sds.shape, mesh, rules))
+
+    return jax.tree.map(one, specs, shapes, is_leaf=_is_axes)
+
+
+def param_shardings(specs, mesh, shapes=None, rules: Rules | None = None):
+    """Parameter shardings from logical axes alone.
+
+    Without ``shapes`` the divisibility check is skipped (structural
+    mapping — jax pads uneven shards); pass ``shapes`` for the
+    shape-checked variant (== ``tree_shardings``).
+    """
+    if shapes is not None:
+        return tree_shardings(specs, shapes, mesh, rules)
+
+    def one(axes):
+        return NamedSharding(mesh, P(*_assign(axes, None, mesh, rules)))
+
+    return jax.tree.map(one, specs, is_leaf=_is_axes)
+
+
+def _flat_axes(entry) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def zero1_shardings(specs, shapes, mesh, rules: Rules | None = None):
+    """ZeRO-1 optimizer-state shardings: the parameter sharding plus one
+    extra shard over the free data axes per leaf.
+
+    The first still-replicated dim whose size is divisible by the full free
+    data-parallel degree takes it (then single data axes are tried in
+    order); a leaf with no divisible dim falls back to the plain parameter
+    sharding (replicated over data, as before ZeRO).
+    """
+    sizes = _axis_sizes(mesh)
+    data_axes = tuple(
+        a for a in ("pod", "data") if a in sizes and sizes[a] > 1
+    )
+
+    def one(axes, sds):
+        entries = _assign(axes, sds.shape, mesh, rules)
+        used = {a for e in entries for a in _flat_axes(e)}
+        free = tuple(a for a in data_axes if a not in used)
+        cands = [free] if free else []
+        if len(free) > 1:  # then single axes, biggest shard degree first
+            cands += [(a,) for a in sorted(free, key=lambda a: -sizes[a])]
+        done = False
+        for cand in cands:
+            if done:
+                break
+            n = math.prod(sizes[a] for a in cand)
+            for i, e in enumerate(entries):
+                if e is None and sds.shape[i] % n == 0:
+                    entries[i] = cand[0] if len(cand) == 1 else cand
+                    done = True
+                    break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, specs, shapes, is_leaf=_is_axes)

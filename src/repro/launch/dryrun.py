@@ -126,6 +126,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, variant: str = "baselin
     bytes_accessed = float(hlo["bytes"])
     coll = hlo["collectives"]
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):  # older jax returns [dict]
+        xla_cost = xla_cost[0] if xla_cost else {}
 
     n_chips = mesh.size
     mf = model_flops(cfg, shape, run)

@@ -57,6 +57,31 @@ _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand references of an op line.
+
+    ``rest`` starts immediately after the op's opening paren; operands are
+    ``type %name`` entries (types may themselves contain commas and tuple
+    parens), so splitting on commas corrupts the names — instead cut at the
+    matching close paren and take the ``%name`` references, which excludes
+    trailing attrs like ``calls=%...`` / ``body=%...``.
+    """
+    depth = 1
+    seg = rest
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                seg = rest[:i]
+                break
+    return _REF_RE.findall(seg)
+
+
 def _shapes(type_str: str) -> list[tuple[str, list[int]]]:
     out = []
     for dt, dims in _TYPE_RE.findall(type_str):
@@ -108,17 +133,12 @@ class _Comp:
         passthrough = {"bitcast", "reshape", "transpose", "copy", "convert"}
         for op in self.ops:
             if op.kind in passthrough:
-                first = (
-                    op.rest.split(")")[0].split(",")[0].strip().lstrip("%").split(" ")[0]
-                )
-                if first in origin:
-                    origin[op.name] = origin[first]
+                ops_in = _operand_names(op.rest)
+                if ops_in and ops_in[0] in origin:
+                    origin[op.name] = origin[ops_in[0]]
         out: dict[int, int] = {}
         for op in self.ops:
-            operands = [
-                t.strip().lstrip("%").split(" ")[0]
-                for t in op.rest.split(")")[0].split(",")
-            ]
+            operands = _operand_names(op.rest)
             if op.kind == "dynamic-slice" and operands and operands[0] in origin:
                 out[origin[operands[0]]] = _bytes_of(op.result_type)
             if (
@@ -172,8 +192,8 @@ def _dot_flops(op: _Op, defs: dict[str, str]) -> float:
     for _, dims in res:
         for d in dims:
             out_elems *= d
-    lhs_name = op.rest.split(",")[0].strip().lstrip("%")
-    lhs_type = defs.get(lhs_name, "")
+    operands = _operand_names(op.rest)
+    lhs_type = defs.get(operands[0], "") if operands else ""
     lhs_shapes = _shapes(lhs_type)
     contract = 1
     m = _LHS_C_RE.search(op.rest)
@@ -209,10 +229,7 @@ def analyze(hlo_text: str) -> dict:
             if kind in _FREE_OPS:
                 continue
             out_b = _bytes_of(op.result_type)
-            operand_names = [
-                t.strip().lstrip("%").split(" ")[0]
-                for t in op.rest.split(")")[0].split(",")
-            ]
+            operand_names = _operand_names(op.rest)
             slice_map: dict[int, int] = {}
             if kind == "fusion":
                 m0 = _CALLS_RE.search(op.rest)

@@ -37,7 +37,8 @@ def check_ep_matches_dense():
     p, _ = moe_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
     y_dense, aux_d = moe_apply_dense(p, x, cfg)
-    with jax.set_mesh(mesh):
+    set_mesh = getattr(jax, "set_mesh", None)  # jax<0.6: Mesh is the ctx mgr
+    with (set_mesh(mesh) if set_mesh else mesh):
         y_ep, aux_e = moe_apply_ep(p, x, cfg, mesh)
     np.testing.assert_allclose(
         np.asarray(y_dense), np.asarray(y_ep), atol=2e-5
@@ -150,6 +151,37 @@ def check_zero1_shardings():
     print(f"zero1 shardings: OK ({n_extra} leaves gained a data shard)")
 
 
+def check_ep_dispatch_uses_dpm_schedule():
+    """EP dispatch is lowered through the DPM multicast schedule: the
+    traced program runs ppermute rounds, not a bare all_to_all."""
+    from repro.configs import SMOKES
+    from repro.dist.ep import moe_apply_ep
+    from repro.dist.multicast import alltoall_schedule
+    from repro.models.moe import moe_init
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    sched = alltoall_schedule(4, "DPM")
+    pairs = sorted(pr for rnd in sched.rounds for pr in rnd)
+    assert pairs == sorted(
+        (i, j) for i in range(4) for j in range(4) if i != j
+    ), pairs
+
+    cfg = SMOKES["moonshot-v1-16b-a3b"]
+    p, _ = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    jaxpr = str(
+        jax.make_jaxpr(lambda q, z: moe_apply_ep(q, z, cfg, mesh)[0])(p, x)
+    )
+    assert "ppermute" in jaxpr, "EP dispatch must run the schedule's rounds"
+    assert "all_to_all" not in jaxpr, "EP dispatch must not use bare all_to_all"
+    n_perm = jaxpr.count("ppermute")
+    assert n_perm >= 2 * sched.num_rounds, (n_perm, sched.num_rounds)
+    print(
+        f"ep dispatch schedule: OK (DPM, {sched.num_rounds} rounds, "
+        f"{n_perm} ppermutes in jaxpr)"
+    )
+
+
 if __name__ == "__main__":
     assert jax.device_count() == 8, jax.devices()
     check_dpm_broadcast()
@@ -157,4 +189,5 @@ if __name__ == "__main__":
     check_pipeline_forward()
     check_zero1_shardings()
     check_ep_matches_dense()
+    check_ep_dispatch_uses_dpm_schedule()
     print("ALL DIST CHECKS PASSED")

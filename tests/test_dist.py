@@ -1,5 +1,9 @@
-"""Distribution-layer tests (run in a subprocess with 8 forced host devices
-so the main pytest process keeps its 1-device view)."""
+"""Distribution-layer tests.
+
+The multi-device placement checks run in a subprocess with 8 forced host
+devices (so the main pytest process keeps its 1-device view); the schedule
+*planning* tests below are pure host-side and run here directly.
+"""
 import pathlib
 import subprocess
 import sys
@@ -24,3 +28,77 @@ def test_dist_checks_subprocess():
     )
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "ALL DIST CHECKS PASSED" in proc.stdout
+
+
+def test_alltoall_schedule_covers_all_pairs_as_permutation_rounds():
+    """The EP dispatch schedule: every (src, dst) chunk exactly once,
+    unique senders/receivers per round (the ppermute constraint), and
+    wraparound hop counts from the DPM planner."""
+    from repro.dist.multicast import alltoall_schedule
+
+    for n in (4, 8):
+        s = alltoall_schedule(n, "DPM")
+        pairs = sorted(p for rnd in s.rounds for p in rnd)
+        assert pairs == sorted(
+            (i, j) for i in range(n) for j in range(n) if i != j
+        )
+        for rnd in s.rounds:
+            senders = [a for a, _ in rnd]
+            receivers = [b for _, b in rnd]
+            assert len(set(senders)) == len(senders)
+            assert len(set(receivers)) == len(receivers)
+        # wraparound: no transfer walks more than half the ring
+        assert all(h <= n // 2 for rh in s.hops for h in rh)
+
+
+def test_dpm_alltoall_beats_ring_shift_on_link_bytes():
+    from repro.dist.multicast import alltoall_schedule, ring_alltoall_schedule
+
+    for n in (8, 16):
+        dpm = alltoall_schedule(n, "DPM").cost(1 << 20)
+        ring = ring_alltoall_schedule(n).cost(1 << 20)
+        assert dpm["link_bytes"] < ring["link_bytes"]
+        assert dpm["rounds"] <= ring["rounds"]
+
+
+def test_dpm_broadcast_halves_ring_rounds():
+    from repro.dist.multicast import dp_broadcast_schedule, ring_broadcast_schedule
+
+    dpm = dp_broadcast_schedule(16, "DPM")
+    ring = ring_broadcast_schedule(16)
+    assert dpm.num_rounds < ring.num_rounds
+    assert dpm.cost(1 << 20)["time_us"] < ring.cost(1 << 20)["time_us"]
+
+
+def test_schedule_cost_per_request_payloads():
+    """cost(req_payload_bytes=...) prices each transfer by its own chunk."""
+    from repro.dist.multicast import Schedule, alltoall_schedule
+
+    s = alltoall_schedule(4, "DPM")
+    uniform = s.cost(1 << 10)
+    per_req = s.cost(1 << 10, req_payload_bytes={})  # all fall back
+    assert per_req["link_bytes"] == uniform["link_bytes"]
+    half = {r: 1 << 9 for rr in s.round_reqs for r in rr}
+    assert s.cost(1 << 10, req_payload_bytes=half)["link_bytes"] == (
+        uniform["link_bytes"] / 2
+    )
+    # a hand-built Schedule without round_reqs must not drop transfers
+    bare = Schedule(4, [[(0, 1), (2, 3)]], [[1, 1]])
+    assert bare.cost(1 << 10, req_payload_bytes={})["link_bytes"] == (
+        bare.cost(1 << 10)["link_bytes"]
+    )
+
+
+def test_pipeline_rejects_stage_count_mismatch():
+    """More stage slices than pipe ranks must raise, not silently drop
+    layers (the per-stage [0] slice would otherwise eat them)."""
+    import jax.numpy as jnp
+
+    from repro.dist.pipeline import pipeline_apply
+    from repro.dist.sharding import abstract_mesh
+
+    mesh = abstract_mesh(("pipe", 2))
+    ws = jnp.zeros((4, 1, 8, 8))  # 4 stage slices on a 2-rank axis
+    x = jnp.zeros((4, 2, 8))
+    with pytest.raises(ValueError, match="stage_params leading dim"):
+        pipeline_apply(lambda w, h: h @ w, ws, x, mesh)

@@ -32,6 +32,8 @@ def test_analyzer_counts_scan_trip_counts():
     assert abs(a_scan["flops"] - a_unrl["flops"]) / a_unrl["flops"] < 0.05
     assert a_scan["flops"] >= expect
     xla = jax.jit(scanned).lower(w, x).compile().cost_analysis()
+    if isinstance(xla, (list, tuple)):  # older jax returns [dict]
+        xla = xla[0]
     assert xla["flops"] < expect / 4  # demonstrates the undercount
 
 

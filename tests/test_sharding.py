@@ -1,0 +1,113 @@
+"""dist.sharding rule tables — main-process (1-device view) tests.
+
+AbstractMesh carries axis names/sizes without devices, so rule lookup,
+divisibility fallback, and ZeRO-1 extension are all testable here; the
+multi-device placement behaviour is covered by tests/dist_checks.py.
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    CACHE_RULES,
+    DEFAULT_RULES,
+    SEQ_RULES,
+    abstract_mesh,
+    param_shardings,
+    spec_for_shape,
+    tree_shardings,
+    zero1_shardings,
+)
+
+SDS = jax.ShapeDtypeStruct
+MESH = abstract_mesh(("data", 2), ("model", 4))
+POD = abstract_mesh(("pod", 2), ("data", 4), ("model", 2))
+
+
+def test_rule_candidate_precedence():
+    """batch tries ("pod", "data") before ("data",): the first candidate
+    whose axes all exist and divide wins."""
+    # pod present and 32 % (2*4) == 0 -> co-sharded over both
+    assert spec_for_shape(("batch", "embed"), (32, 17), POD) == P(
+        ("pod", "data"), None
+    )
+    # no pod axis -> the ("data",) fallback candidate
+    assert spec_for_shape(("batch", "embed"), (32, 17), MESH) == P("data", None)
+    # pod*data=8 does not divide 4, data=4 does -> precedence steps down
+    assert spec_for_shape(("batch", "embed"), (4, 16), POD) == P("data", None)
+
+
+def test_rule_table_override_precedence():
+    """An explicit rules table replaces DEFAULT_RULES wholesale."""
+    axes, shape = ("batch", "seq", "embed"), (8, 64, 96)
+    assert spec_for_shape(axes, shape, MESH) == P("data", None, None)
+    assert spec_for_shape(axes, shape, MESH, SEQ_RULES) == P("data", "model", None)
+    assert spec_for_shape(axes, shape, MESH, DEFAULT_RULES) == P(
+        "data", None, None
+    )
+
+
+def test_spec_for_shape_odd_shapes_replicate():
+    assert spec_for_shape(("vocab", "embed"), (49153, 577), MESH) == P(None, None)
+    # one odd dim falls back alone, the other still shards
+    assert spec_for_shape(("vocab", "embed"), (49152, 577), MESH) == P(
+        "model", None
+    )
+
+
+def test_no_mesh_axis_reuse_within_an_array():
+    """model goes to the first dim wanting it; later dims replicate."""
+    assert spec_for_shape(("heads", "mlp"), (8, 8), MESH) == P("model", None)
+    # under SEQ_RULES seq takes model before mlp can
+    assert spec_for_shape(
+        ("batch", "seq", "mlp"), (8, 64, 64), MESH, SEQ_RULES
+    ) == P("data", "model", None)
+
+
+def test_cache_rules_shard_seq_not_heads():
+    assert spec_for_shape(
+        ("layers", "batch", "seq", "kv_heads", "head_dim"),
+        (2, 8, 64, 4, 16),
+        MESH,
+        CACHE_RULES,
+    ) == P(None, "data", "model", None, None)
+
+
+def test_tree_and_param_shardings():
+    specs = {"w": ("embed", "mlp"), "n": ("embed",)}
+    shapes = {"w": SDS((96, 256), jnp.float32), "n": SDS((96,), jnp.float32)}
+    tr = tree_shardings(specs, shapes, MESH)
+    assert tr["w"].spec == P(None, "model")
+    assert tr["n"].spec == P(None)
+    # shape-free structural mapping skips the divisibility check
+    ps = param_shardings({"w": ("embed", "heads")}, MESH)
+    assert ps["w"].spec == P(None, "model")
+
+
+def test_zero1_adds_data_shard_with_replication_fallback():
+    specs = {
+        "emb": ("vocab", "embed"),
+        "norm": ("layers", "embed"),
+        "odd": ("layers", "embed"),
+    }
+    shapes = {
+        "emb": SDS((512, 96), jnp.float32),
+        "norm": SDS((3, 96), jnp.float32),
+        "odd": SDS((3, 97), jnp.float32),  # nothing divides by data=2
+    }
+    zs = zero1_shardings(specs, shapes, MESH)
+    assert zs["emb"].spec == P("model", "data")
+    assert zs["norm"].spec == P(None, "data")
+    assert zs["odd"].spec == P(None, None)  # fallback: stays replicated
+
+
+def test_zero1_multi_data_axis_precedence():
+    """Full pod*data degree first, then single data axes."""
+    specs = {"a": ("layers", "embed"), "b": ("layers", "embed")}
+    shapes = {
+        "a": SDS((3, 64), jnp.float32),  # 64 % (2*4) == 0 -> ("pod","data")
+        "b": SDS((3, 4), jnp.float32),  # only data=4 divides
+    }
+    zs = zero1_shardings(specs, shapes, POD)
+    assert zs["a"].spec == P(None, ("pod", "data"))
+    assert zs["b"].spec == P(None, "data")
