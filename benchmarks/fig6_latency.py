@@ -21,6 +21,7 @@ def run(quick: bool = False, cycles: int | None = None):
     rows = []
     data = {}
     for dr in DEST_RANGES:
+        # measurement window comes from NoCConfig defaults (DESIGN.md §5)
         curves, saturated, zero = run_curve(dr, rates, cycles)
         data[str(dr)] = {
             "curves": {

@@ -17,6 +17,7 @@ def run(quick: bool = False):
     base_rate = 0.085
     rows = []
     for bench in PARSEC_PROFILES:
+        # measurement window comes from NoCConfig (shared with noc.xsim)
         cfg = NoCConfig()
         wl = parsec_workload(cfg, bench, cycles, base_rate=base_rate, seed=5)
         lat = {}

@@ -21,7 +21,11 @@ def run_curve(
     seed: int = 3,
     saturation_factor: float = 4.0,
 ):
-    """(rate -> {algo: (latency, power_pj_per_cycle)}) + saturation rates."""
+    """(rate -> {algo: (latency, power_pj_per_cycle)}) + saturation rates.
+
+    The measurement window (warmup / drain_grace) rides on ``NoCConfig``
+    defaults — the single source of truth shared with ``noc.xsim``.
+    """
     cfg = NoCConfig(dest_range=dest_range)
     out: dict[float, dict[str, tuple[float, float]]] = {}
     saturated: dict[str, float | None] = {a: None for a in ALGOS}

@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated module names "
-        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist)",
+        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim)",
     )
     args = ap.parse_args()
 
@@ -31,6 +31,7 @@ def main() -> None:
         partition_quality,
         torus_planner,
         tpu_multicast,
+        xsim_sweep,
     )
 
     suites = {
@@ -42,6 +43,7 @@ def main() -> None:
         "torus": torus_planner.run,
         "kernels": kernels_micro.run,
         "dist": dist_collectives.run,
+        "xsim": xsim_sweep.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

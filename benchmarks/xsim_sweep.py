@@ -1,0 +1,198 @@
+"""xsim vs WormholeSim: wall-clock + fig6-style batched latency curves.
+
+Protocol (all knobs through ``NoCConfig`` — satellite of ISSUE 3):
+
+* a saturation-regime fig6-style sweep — 10 injection rates x 4 algorithms
+  (MU/MP/NMP/DPM) on the paper's 8x8 mesh at the heaviest destination range
+  (10-16) — run twice: sequentially through the event-ordered Python
+  ``WormholeSim`` (one ``simulate`` per point) and as batched ``xsimulate``
+  dispatches (the whole grid in one vmapped/pmapped scan).
+* the planner cache is pre-warmed untimed for both engines (planning is
+  shared infrastructure); the xsim timing *includes* host lowering, XLA
+  compilation and the device run — everything a user pays.
+* cross-validation gate: on small mesh/torus workloads, per-packet delivery
+  sets must be identical and average latency within 10% (the xsim fidelity
+  contract, also pinned by tests/test_xsim.py).
+
+The committed artifact (results/xsim_sweep.json) records curves from both
+engines, the wall-clock breakdown, measured speedup, parity results, and the
+host parallelism available — the batch axis shards across forced host CPU
+devices, so the speedup scales with cores (this container has very few; see
+the artifact's "env" block).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+CACHE = pathlib.Path(__file__).parent / "results" / "xsim_sweep.json"
+
+
+def _force_host_devices() -> None:
+    """Shard the batched scan across host cores (one forced CPU device per
+    core). Only possible before the jax backend initializes, and only done
+    when this suite runs — never as an import side effect, so other
+    benchmark suites keep their default single-device topology."""
+    if "XLA_FLAGS" in os.environ:
+        return
+    try:
+        from jax._src import xla_bridge
+
+        if xla_bridge._backends:  # backend already up: too late, no-op
+            return
+    except Exception:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.cpu_count() or 1}"
+    )
+
+ALGOS = ("MU", "MP", "NMP", "DPM")
+PARITY_CASES = [
+    ("mesh-unicast", dict(n=4, multicast_fraction=0.0), 0.05, 100, "MU"),
+    ("mesh-multicast", dict(n=5, multicast_fraction=0.5,
+                            dest_range=(3, 6)), 0.04, 150, "DPM"),
+    ("torus-multicast", dict(n=4, topology="torus",
+                             dest_range=(2, 5)), 0.06, 150, "DPM"),
+]
+
+
+def _parity_case(name, cfg_kw, rate, cycles, algo):
+    from repro.core import plan
+    from repro.core.topology import make_topology
+    from repro.noc import NoCConfig, WormholeSim, synthetic_workload, xsimulate
+
+    cfg = NoCConfig(warmup=0, drain_grace=800, **cfg_kw)
+    wl = synthetic_workload(cfg, rate, cycles, seed=2)
+    res = xsimulate(cfg, [wl], (algo,))
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
+    sim = WormholeSim(cfg, measure_window=(0, wl.horizon))
+    for r in wl.requests:
+        sim.add_plan(plan(algo, g, r.src, r.dests), r.time)
+    pst = sim.run(wl.horizon + cfg.drain_grace)
+    psets = {pk.pid: {g.idx(c) for c in pk.delivery_times}
+             for pk in sim.packets}
+    xlat = float(res.avg_latency(0, 0))
+    dev = abs(xlat - pst.avg_latency) / max(1e-9, pst.avg_latency)
+    return {
+        "case": name,
+        "delivery_sets_equal": bool(psets == res.delivered_sets(0, 0)),
+        "latency_py": round(pst.avg_latency, 3),
+        "latency_xsim": round(xlat, 3),
+        "latency_rel_dev": round(dev, 4),
+        "within_10pct": bool(dev <= 0.10),
+    }
+
+
+def run(quick: bool = False):
+    _force_host_devices()
+    import jax
+
+    from repro.core import plan
+    from repro.core.topology import make_topology
+    from repro.noc import NoCConfig, simulate, synthetic_workload, xsimulate
+
+    cycles = 250 if quick else 600
+    rates = (
+        [0.06, 0.10, 0.14]
+        if quick
+        else [0.05, 0.06, 0.07, 0.08, 0.09, 0.10, 0.11, 0.12, 0.13, 0.14]
+    )
+    cfg = NoCConfig(dest_range=(10, 16), warmup=100, drain_grace=400)
+    wls = [synthetic_workload(cfg, r, cycles, seed=3) for r in rates]
+
+    # planner cache warmup — shared infrastructure, untimed for both engines
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
+    for wl in wls:
+        for r in wl.requests:
+            for a in ALGOS:
+                plan(a, g, r.src, r.dests)
+
+    # --- sequential Python WormholeSim baseline -------------------------
+    py_curves: dict[str, list] = {a: [] for a in ALGOS}
+    t0 = time.monotonic()
+    for rate, wl in zip(rates, wls):
+        for algo in ALGOS:
+            st = simulate(cfg, wl, algo)
+            py_curves[algo].append((rate, round(st.avg_latency, 2)))
+    t_py = time.monotonic() - t0
+
+    # --- batched xsim: the whole grid through one engine ----------------
+    slots = 256 if quick else 384
+    t0 = time.monotonic()
+    res = xsimulate(cfg, wls, ALGOS, slots=slots)
+    x_curves = {
+        algo: [(rates[w], round(float(res.avg_latency(w, a)), 2))
+               for w in range(len(rates))]
+        for a, algo in enumerate(ALGOS)
+    }
+    t_x_cold = time.monotonic() - t0
+    # sustained: same shapes, XLA executable cached — the marginal cost of
+    # the next sweep in a design-space-exploration campaign
+    t0 = time.monotonic()
+    xsimulate(cfg, wls, ALGOS, slots=slots)
+    t_x = time.monotonic() - t0
+
+    parity = [_parity_case(*case) for case in PARITY_CASES]
+    speedup = t_py / max(1e-9, t_x)
+    speedup_cold = t_py / max(1e-9, t_x_cold)
+
+    data = {
+        "sweep": {
+            "mesh": "8x8", "dest_range": [10, 16], "cycles": cycles,
+            "warmup": cfg.warmup, "drain_grace": cfg.drain_grace,
+            "rates": rates, "algos": list(ALGOS),
+            "points": len(rates) * len(ALGOS),
+        },
+        "wall_clock_s": {
+            "python_wormhole_sequential": round(t_py, 2),
+            "xsim_batched_cold": round(t_x_cold, 2),
+            "xsim_batched_sustained": round(t_x, 2),
+            "xsim_note": "cold includes host lowering + XLA compile + device"
+                         " run; sustained reuses the cached executable (the"
+                         " marginal sweep cost); planner cache pre-warmed"
+                         " untimed for both engines",
+        },
+        "speedup": round(speedup, 2),
+        "speedup_cold": round(speedup_cold, 2),
+        "speedup_note": (
+            "measured on this container — see env.cpu_count. The batched "
+            "scan is scatter-bound on XLA:CPU (segmented-min ~0.1us/update, "
+            "serialized per core) and shards the sweep axis across host "
+            "devices via pmap, so the speedup scales with available cores "
+            "while the Python baseline is inherently single-core; the 20x "
+            "regime needs a many-core host or the accelerator (Pallas) "
+            "arbitration path"
+        ),
+        "env": {
+            "cpu_count": os.cpu_count(),
+            "jax_devices": jax.local_device_count(),
+            "backend": jax.default_backend(),
+        },
+        "xsim": {"slots": res.slots, "slots_hwm": res.slots_hwm(),
+                 "cycles_simulated": res.cycles},
+        "curves": {"python": py_curves, "xsim": x_curves},
+        "cross_validation": parity,
+    }
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(data, indent=1))
+
+    rows = [
+        ("xsim_sweep/python_sequential", t_py * 1e6,
+         f"points={len(rates) * len(ALGOS)}"),
+        ("xsim_sweep/xsim_batched", t_x * 1e6,
+         f"slots={res.slots};devices={jax.local_device_count()}"),
+        ("xsim_sweep/speedup", 0.0,
+         f"sustained=x{speedup:.1f};cold=x{speedup_cold:.1f}"),
+    ]
+    for p in parity:
+        rows.append((
+            f"xsim_sweep/parity/{p['case']}", 0.0,
+            f"sets_equal={p['delivery_sets_equal']};"
+            f"latency_dev={p['latency_rel_dev']:.4f}",
+        ))
+    for algo in ALGOS:
+        curve = ";".join(f"{r}:{lat}" for r, lat in x_curves[algo])
+        rows.append((f"xsim_sweep/curve/{algo}", 0.0, curve))
+    return rows

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: segmented-min arbitration for the xsim NoC stepper.
+
+One simulated cycle of ``repro.noc.xsim`` resolves two resource-arbitration
+rounds (per-directed-link flit grants, per-node ejection grants). Both reduce
+to the same primitive: given a flat vector of candidate *age keys* and the
+resource id each candidate contends for, find the minimum key per resource —
+the winner is then the candidate whose key equals its resource's minimum
+(keys are unique by construction: (enqueue_cycle, packet, flit)).
+
+This file holds the Pallas implementation of that primitive. The grid is
+2-D: ``(resource tiles, candidate tiles)``; each program compares its
+candidate tile's segment ids against its resource tile's ids (broadcasted
+iota) and min-accumulates into the output block, which is revisited across
+the candidate dimension (j == 0 initializes). Integer/VPU work only — the
+(RT, CT) compare/select tile is the whole kernel.
+
+``ref.py`` is the jnp oracle (``jax.ops.segment_min``); ``ops.py`` picks the
+backend and derives winner masks. Parity is pinned by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large sentinel: above every real key, far from int32 overflow when compared.
+# A plain Python int so kernels can close over it without a captured constant.
+NOC_INF = 2**30
+
+
+def _kernel(keys_ref, segs_ref, out_ref, *, rt: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NOC_INF)
+
+    keys = keys_ref[0, :]  # (CT,)
+    segs = segs_ref[0, :]
+    ct = keys.shape[0]
+    # resource ids covered by this output tile, one per sublane row
+    res = i * rt + jax.lax.broadcasted_iota(jnp.int32, (rt, ct), 0)
+    hit = jnp.where(segs[None, :] == res, keys[None, :], NOC_INF)  # (RT, CT)
+    out_ref[0, :] = jnp.minimum(out_ref[0, :], jnp.min(hit, axis=1))
+
+
+def segmented_min(
+    keys: jax.Array,  # (N,) int32 candidate age keys (NOC_INF = no candidate)
+    segs: jax.Array,  # (N,) int32 resource id per candidate in [0, num_segments)
+    num_segments: int,
+    *,
+    res_tile: int = 128,
+    cand_tile: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-resource minimum key, shape ``(num_segments,)`` int32.
+
+    Resources with no candidate hold ``NOC_INF``. Out-of-range segment ids
+    must carry ``NOC_INF`` keys (the padding convention of the stepper).
+    """
+    (N,) = keys.shape
+    rpad = (-num_segments) % res_tile
+    cpad = (-N) % cand_tile
+    keys = jnp.pad(keys, (0, cpad), constant_values=NOC_INF)
+    segs = jnp.pad(segs, (0, cpad), constant_values=-1)
+    Rp, Np = num_segments + rpad, N + cpad
+    kernel = functools.partial(_kernel, rt=res_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Rp // res_tile, Np // cand_tile),
+        in_specs=[
+            pl.BlockSpec((1, cand_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((1, cand_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, res_tile), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Rp), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(1, Np).astype(jnp.int32), segs.reshape(1, Np).astype(jnp.int32))
+    return out[0, :num_segments]

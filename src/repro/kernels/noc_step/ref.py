@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the noc_step segmented-min kernel (same contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .noc_step import NOC_INF
+
+
+def segmented_min_ref(
+    keys: jax.Array, segs: jax.Array, num_segments: int
+) -> jax.Array:
+    """Per-resource minimum key via scatter-min; NOC_INF where no candidate.
+
+    Out-of-range segment ids (the stepper's padding) are clamped to segment 0
+    — harmless because the padding convention gives them NOC_INF keys.
+    """
+    segs = jnp.clip(segs, 0, num_segments - 1)
+    out = jax.ops.segment_min(
+        keys, segs, num_segments=num_segments, indices_are_sorted=False
+    )
+    # segment_min's identity for empty segments is iinfo.max; normalize to the
+    # kernel's NOC_INF so both backends are bit-identical.
+    return jnp.minimum(out, NOC_INF).astype(jnp.int32)

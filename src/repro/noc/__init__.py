@@ -1,4 +1,9 @@
-"""Cycle-level wormhole NoC simulator, traffic generators and power model."""
+"""Cycle-level wormhole NoC simulator, traffic generators and power model.
+
+Two execution engines share the planners, workloads, and config: the
+event-ordered Python ``WormholeSim`` (the fidelity oracle) and the
+vectorized ``noc.xsim`` scan/vmap engine for batched sweeps (DESIGN.md §5).
+"""
 from .config import DEST_RANGES, EnergyModel, NoCConfig
 from .simulator import SimStats, WormholeSim
 from .traffic import (
@@ -10,6 +15,7 @@ from .traffic import (
     simulate,
     synthetic_workload,
 )
+from .xsim import XSimResults, latency_vs_rate_batched, xsimulate
 
 __all__ = [
     "DEST_RANGES",
@@ -20,8 +26,11 @@ __all__ = [
     "SimStats",
     "Workload",
     "WormholeSim",
+    "XSimResults",
     "latency_vs_rate",
+    "latency_vs_rate_batched",
     "parsec_workload",
     "simulate",
     "synthetic_workload",
+    "xsimulate",
 ]

@@ -33,6 +33,12 @@ class NoCConfig:
     multicast_fraction: float = 0.10
     dest_range: tuple[int, int] = (4, 8)  # paper sweeps (2-5),(4-8),(7-10),(10-16)
     energy: EnergyModel = field(default_factory=EnergyModel)
+    # measurement window shared by both simulators (traffic.simulate and
+    # noc.xsim): packets enqueued in [warmup, horizon) are measured, and the
+    # run extends drain_grace cycles past the last injection to let in-flight
+    # packets deliver.
+    warmup: int = 200
+    drain_grace: int = 3000
 
     @property
     def rows(self) -> int:

@@ -11,6 +11,7 @@ the published workload characteristics.
 from __future__ import annotations
 
 import random
+import zlib
 from dataclasses import dataclass, field
 
 from ..core.grid import Coord
@@ -90,7 +91,9 @@ def parsec_workload(
     seed: int = 0,
 ) -> Workload:
     rel_load, mc, dr, burst_p, burst_len = PARSEC_PROFILES[benchmark]
-    rng = random.Random(seed ^ hash(benchmark) & 0xFFFF)
+    # stable digest, NOT hash(): str hashing is salted per process
+    # (PYTHONHASHSEED), which made fig8 traces irreproducible across runs.
+    rng = random.Random(seed ^ zlib.crc32(benchmark.encode()) & 0xFFFF)
     g = make_topology(cfg.topology, cfg.n, cfg.m)
     nodes = [(x, y) for y in range(g.rows) for x in range(g.n)]
     rate = base_rate * rel_load
@@ -123,10 +126,16 @@ def simulate(
     cfg: NoCConfig,
     workload: Workload,
     algo: str,
-    warmup: int = 200,
-    drain_grace: int = 3000,
+    warmup: int | None = None,
+    drain_grace: int | None = None,
 ) -> SimStats:
-    """Run one workload under one algorithm; measure post-warmup packets."""
+    """Run one workload under one algorithm; measure post-warmup packets.
+
+    ``warmup``/``drain_grace`` default from ``cfg`` — NoCConfig is the single
+    source of truth for the measurement window shared with ``noc.xsim``.
+    """
+    warmup = cfg.warmup if warmup is None else warmup
+    drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
     g = make_topology(cfg.topology, cfg.n, cfg.m)
     sim = WormholeSim(cfg, measure_window=(warmup, workload.horizon))
     for r in workload.requests:

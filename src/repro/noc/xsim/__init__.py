@@ -1,0 +1,19 @@
+"""xsim — fixed-shape, array-based NoC simulator for massively parallel
+DPM sweeps (compiler -> scan stepper -> vmapped batch runner).
+
+The host ``WormholeSim`` is the event-ordered oracle; xsim trades exact
+sequential arbitration order for dense-state purity so that whole (rate,
+algorithm, seed) grids batch into one device dispatch. See DESIGN.md §5 for
+the state layout and fidelity contract.
+"""
+from .compile import CompiledTraffic, compile_workload, stack_traffic
+from .run import XSimResults, latency_vs_rate_batched, xsimulate
+
+__all__ = [
+    "CompiledTraffic",
+    "XSimResults",
+    "compile_workload",
+    "latency_vs_rate_batched",
+    "stack_traffic",
+    "xsimulate",
+]

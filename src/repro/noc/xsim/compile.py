@@ -1,0 +1,268 @@
+"""Lower host-side MulticastPlans into the dense tensors xsim steps over.
+
+The compiler mirrors ``WormholeSim.add_plan`` exactly: one row per wormhole
+packet (degenerate single-node paths are skipped, DPM child packets keep
+their parent linkage), in workload-request order, so packet ids line up 1:1
+between the two simulators — the cross-validation tests compare per-pid
+delivery sets directly.
+
+Per-packet scalars and per-stage tables (stage ``s`` is the input FIFO at
+``hops[s+1]`` fed by directed link ``(hops[s], hops[s+1])``):
+
+* ``link[P, S]``    directed-link id ``idx(u) * 4 + direction(u -> v)``
+                    (directions: +x, -x, +y, -y; torus wrap hops resolve
+                    through ``Topology.delta``'s signed shortest step).
+* ``vcls[P, S]``    VC class of the hop — HIGH(0) iff the boustrophedon
+                    label increases along it (core.grid labeling, the
+                    paper's dual-path deadlock rule, same as the host sim).
+* ``deliver[P, S]`` tail-flit delivery points (first occurrence per node).
+* ``node[P, S]``    row-major index of ``hops[s+1]`` (delivery reporting).
+* ``release_stage`` for child packets: the parent stage whose header entry
+                    at the representative releases the child (cut-through
+                    relay, as in the host sim's ``header_times`` rule).
+* ``lane``          NI injection lane ``idx(source) * 2 + is_child`` — child
+                    packets use the multicast relay port, fresh traffic the
+                    normal injection queue (two lanes per node, as in the
+                    host sim's ``src_queues``).
+
+Padding rows have ``enqueue = NEVER`` and are never released; padded stage
+entries hold link 0 and are unreachable (``fpos < num_stages`` gating).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ...core.grid import Coord
+from ...core.planner import MulticastPlan, plan
+from ...core.topology import make_topology
+from ..config import NoCConfig
+from ..traffic import Workload
+
+# Enqueue sentinel for padding rows: far beyond any horizon, small enough
+# that key arithmetic (enqueue * P * F) stays well inside int32.
+NEVER = np.int32(2**20)
+
+
+@dataclass(frozen=True)
+class CompiledTraffic:
+    """One workload under one algorithm, lowered to fixed-shape arrays."""
+
+    # static geometry / config
+    n: int
+    m: int
+    kind: str
+    num_nodes: int
+    num_links: int  # directed-link id space: num_nodes * 4
+    horizon: int
+    # per-packet (P,)
+    enqueue: np.ndarray  # int32; NEVER on padding rows
+    parent: np.ndarray  # int32; -1 = root packet
+    release_stage: np.ndarray  # int32; -1 for roots
+    lane: np.ndarray  # int32; node * 2 + is_child
+    num_stages: np.ndarray  # int32
+    eject_node: np.ndarray  # int32; row-major index of hops[-1]
+    valid: np.ndarray  # bool
+    # per-stage (P, S)
+    link: np.ndarray  # int32
+    vcls: np.ndarray  # int32; 0 HIGH / 1 LOW
+    deliver: np.ndarray  # bool
+    node: np.ndarray  # int32
+    # per-lane static injection order (2NN, Q): pids by (enqueue, pid), -1 pad
+    lane_seq: np.ndarray
+    # child (DPM re-injection) table: (C,) rows + (P,) pid -> row map
+    child_ix: np.ndarray  # (P,) int32; -1 = root
+    child_parent: np.ndarray  # (C,) int32
+    child_rs: np.ndarray  # (C,) int32 — parent stage releasing the child
+    child_enq: np.ndarray  # (C,) int32
+
+    @property
+    def num_packets(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def max_stages(self) -> int:
+        return self.link.shape[1]
+
+
+def compile_workload(
+    cfg: NoCConfig,
+    workload: Workload,
+    algo: str,
+    pad_packets: int | None = None,
+    pad_stages: int | None = None,
+) -> CompiledTraffic:
+    """Plan every request and lower the packet set to dense arrays."""
+    g = make_topology(cfg.topology, cfg.n, cfg.m)
+    rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid)
+    for r in workload.requests:
+        pl_ = plan(algo, g, r.src, r.dests)
+        _lower_plan(pl_, r.time, rows)
+    P = len(rows)
+    S = max((len(h) - 1 for h, *_ in rows), default=1)
+    Pp = max(P, 1) if pad_packets is None else pad_packets
+    Sp = S if pad_stages is None else pad_stages
+    if Pp < P or Sp < S:
+        raise ValueError(f"pad ({Pp},{Sp}) smaller than workload ({P},{S})")
+
+    enqueue = np.full(Pp, NEVER, np.int32)
+    parent = np.full(Pp, -1, np.int32)
+    release_stage = np.full(Pp, -1, np.int32)
+    lane = np.zeros(Pp, np.int32)
+    num_stages = np.ones(Pp, np.int32)
+    eject_node = np.zeros(Pp, np.int32)
+    valid = np.zeros(Pp, bool)
+    link = np.zeros((Pp, Sp), np.int32)
+    vcls = np.zeros((Pp, Sp), np.int32)
+    deliver = np.zeros((Pp, Sp), bool)
+    node = np.zeros((Pp, Sp), np.int32)
+
+    # per-stage tables, vectorized over one flat hop-pair array (the python
+    # per-hop loop dominated lowering time on big sweeps)
+    n, m = g.n, g.rows
+    flat_uv: list[Coord] = []
+    lens = np.zeros(P, np.int64)
+    for pid, (hops, deliveries, t, par) in enumerate(rows):
+        ns = len(hops) - 1
+        lens[pid] = ns
+        flat_uv.extend(hops)
+        enqueue[pid] = t
+        parent[pid] = -1 if par is None else par
+        lane[pid] = g.idx(hops[0]) * 2 + (0 if par is None else 1)
+        num_stages[pid] = ns
+        eject_node[pid] = g.idx(hops[-1])
+        valid[pid] = True
+        for d in deliveries:
+            deliver[pid, hops.index(d, 1) - 1] = True
+        if par is not None:
+            release_stage[pid] = rows[par][0].index(hops[0], 1) - 1
+    if P:
+        hv = np.array(flat_uv, np.int64)  # all hops, path-concatenated
+        starts = np.cumsum(lens + 1) - (lens + 1)  # path offsets incl. hop 0
+        total = int(lens.sum())
+        pidx = np.repeat(np.arange(P), lens)
+        sidx = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+        flat = np.repeat(starts, lens) + sidx  # index of hop u of (pid, s)
+        ux, uy = hv[flat, 0], hv[flat, 1]
+        vx, vy = hv[flat + 1, 0], hv[flat + 1, 1]
+        dx, dy = vx - ux, vy - uy
+        if g.wrap:  # signed shortest step (matches Topology.delta)
+            dx = (dx + n // 2) % n - n // 2
+            dy = (dy + m // 2) % m - m // 2
+        dir_ = np.select([dx == 1, dx == -1, dy == 1], [0, 1, 2], default=3)
+        labu = np.where(uy % 2 == 0, uy * n + ux, uy * n + n - 1 - ux)
+        labv = np.where(vy % 2 == 0, vy * n + vx, vy * n + n - 1 - vx)
+        link[pidx, sidx] = (uy * n + ux) * 4 + dir_
+        vcls[pidx, sidx] = labv < labu  # 0 HIGH (label up), 1 LOW
+        node[pidx, sidx] = vy * n + vx
+
+    # static per-lane injection order: (enqueue, pid) — the host sim's FIFO
+    # release order for roots; for children an approximation of the dynamic
+    # parent-arrival order (see step.py fidelity notes)
+    by_lane: dict[int, list[int]] = {}
+    order = sorted(range(P), key=lambda p: (int(enqueue[p]), p))
+    for pid in order:
+        by_lane.setdefault(int(lane[pid]), []).append(pid)
+    Qn = max((len(v) for v in by_lane.values()), default=1)
+    lane_seq = np.full((2 * g.num_nodes, Qn), -1, np.int32)
+    for ln, pids in by_lane.items():
+        lane_seq[ln, : len(pids)] = pids
+
+    child_rows = np.flatnonzero(parent >= 0)
+    C = max(1, len(child_rows))
+    child_ix = np.full(Pp, -1, np.int32)
+    child_parent = np.zeros(C, np.int32)
+    child_rs = np.full(C, NEVER, np.int32)
+    child_enq = np.full(C, NEVER, np.int32)
+    for row, pid in enumerate(child_rows):
+        child_ix[pid] = row
+        child_parent[row] = parent[pid]
+        child_rs[row] = release_stage[pid]
+        child_enq[row] = enqueue[pid]
+
+    # age-key arithmetic must stay inside int32 (see step.py)
+    max_key = (int(enqueue[valid].max(initial=0)) + 1) * Pp * cfg.flits_per_packet
+    assert max_key < 2**28, f"workload too large for int32 age keys ({max_key})"
+    return CompiledTraffic(
+        n=g.n, m=g.rows, kind=g.kind,
+        num_nodes=g.num_nodes, num_links=g.num_nodes * 4,
+        horizon=workload.horizon,
+        enqueue=enqueue, parent=parent, release_stage=release_stage,
+        lane=lane, num_stages=num_stages, eject_node=eject_node, valid=valid,
+        link=link, vcls=vcls, deliver=deliver, node=node,
+        lane_seq=lane_seq, child_ix=child_ix, child_parent=child_parent,
+        child_rs=child_rs, child_enq=child_enq,
+    )
+
+
+def _lower_plan(pl_: MulticastPlan, t: int, rows: list) -> None:
+    """Append one row per packet, matching WormholeSim.add_plan semantics."""
+    idx_map: list[int | None] = []  # plan-local path index -> global pid
+    for path in pl_.paths:
+        if len(path.hops) == 1:
+            # degenerate source-only path: delivered instantly, no packet
+            # (none of the shipped planners emit one as a parent).
+            idx_map.append(None)
+            continue
+        par = None
+        if path.parent is not None:
+            par = idx_map[path.parent]
+            assert par is not None, "parent path must carry flits"
+        assert path.deliveries and path.hops[0] not in path.deliveries
+        idx_map.append(len(rows))
+        rows.append((path.hops, list(path.deliveries), t, par))
+
+
+def stack_traffic(
+    traffics: list[CompiledTraffic],
+) -> tuple[CompiledTraffic, dict[str, np.ndarray]]:
+    """Pad a batch to common (P, S) and stack every array on a new axis 0.
+
+    Returns the first (re-padded) element as the shared-static reference plus
+    the dict of stacked arrays ``{field: (B, ...)}`` that feeds the vmapped
+    runner. All elements must share geometry and id spaces.
+    """
+    t0 = traffics[0]
+    for t in traffics[1:]:
+        if (t.n, t.m, t.kind) != (t0.n, t0.m, t0.kind):
+            raise ValueError("cannot batch traffic across different topologies")
+    Pp = max(t.enqueue.shape[0] for t in traffics)
+    Sp = max(t.max_stages for t in traffics)
+    Qp = max(t.lane_seq.shape[1] for t in traffics)
+    Cp = max(t.child_parent.shape[0] for t in traffics)
+
+    def pad(t: CompiledTraffic) -> CompiledTraffic:
+        dp = Pp - t.enqueue.shape[0]
+        ds = Sp - t.max_stages
+        pad1 = lambda a, fill: np.pad(a, (0, dp), constant_values=fill)
+        pad2 = lambda a: np.pad(a, ((0, dp), (0, ds)))
+        dc = Cp - t.child_parent.shape[0]
+        padc = lambda a, fill: np.pad(a, (0, dc), constant_values=fill)
+        return CompiledTraffic(
+            n=t.n, m=t.m, kind=t.kind, num_nodes=t.num_nodes,
+            num_links=t.num_links, horizon=t.horizon,
+            enqueue=pad1(t.enqueue, NEVER), parent=pad1(t.parent, -1),
+            release_stage=pad1(t.release_stage, -1), lane=pad1(t.lane, 0),
+            num_stages=pad1(t.num_stages, 1), eject_node=pad1(t.eject_node, 0),
+            valid=pad1(t.valid, False),
+            link=pad2(t.link), vcls=pad2(t.vcls),
+            deliver=pad2(t.deliver), node=pad2(t.node),
+            lane_seq=np.pad(
+                t.lane_seq, ((0, 0), (0, Qp - t.lane_seq.shape[1])),
+                constant_values=-1,
+            ),
+            child_ix=pad1(t.child_ix, -1),
+            child_parent=padc(t.child_parent, 0),
+            child_rs=padc(t.child_rs, NEVER),
+            child_enq=padc(t.child_enq, NEVER),
+        )
+
+    padded = [pad(t) for t in traffics]
+    fields = (
+        "enqueue", "parent", "release_stage", "lane", "num_stages",
+        "eject_node", "valid", "link", "vcls", "deliver", "node",
+        "lane_seq", "child_ix", "child_parent", "child_rs", "child_enq",
+    )
+    stacked = {f: np.stack([getattr(t, f) for t in padded]) for f in fields}
+    return padded[0], stacked

@@ -1,0 +1,263 @@
+"""Batch runner: compile -> one jitted, vmapped scan -> SimStats views.
+
+``xsimulate(cfg, workloads, algos)`` lowers every (workload, algorithm) pair
+with the compiler, pads the batch to one common (P, S) shape, and runs the
+whole grid through a single ``jax.vmap``-ed ``jax.lax.scan`` dispatch —
+seeds, injection rates, and routing algorithms all ride the batch axis.
+``latency_vs_rate_batched`` is the fig6 sweep in one call.
+
+The cycle count is fixed (``max horizon + drain_grace``): scans cannot exit
+early, so unlike the host sim there is no drain-and-stop — saturation points
+cost the same as idle ones, which is exactly why the batched sweep wins.
+
+The slot pool starts small and doubles on overflow (an in-flight-worm count
+above K) up to the capacity bound ``2*V*L + 2*NN`` that can never overflow,
+so light sweeps stay cheap and saturated ones stay correct.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import NoCConfig
+from ..simulator import SimStats
+from ..traffic import Workload
+from ...kernels.noc_step.ops import resolve_backend
+from .compile import CompiledTraffic, compile_workload, stack_traffic
+from .step import CTR, init_state, make_step
+
+
+def _run_one(tr: dict, T: int, F: int, V: int, BD: int, L: int, NN: int,
+             K: int, backend: str):
+    P, S = tr["link"].shape
+    C = tr["child_parent"].shape[0]
+    step = make_step(tr, F=F, V=V, BD=BD, L=L, NN=NN, K=K, backend=backend)
+    state = init_state(P, F, S, L, NN, C, K)
+    state, _ = jax.lax.scan(step, state, jnp.arange(T, dtype=jnp.int32))
+    return {
+        "dtime": state.dtime,
+        "ctr": state.ctr,
+        "crel": state.crel,
+        "overflow": state.overflow,
+    }
+
+
+@functools.partial(
+    jax.jit, static_argnames=("T", "F", "V", "BD", "L", "NN", "K", "backend")
+)
+def _run_batch(stacked: dict, T: int, F: int, V: int, BD: int, L: int,
+               NN: int, K: int, backend: str):
+    fn = functools.partial(
+        _run_one, T=T, F=F, V=V, BD=BD, L=L, NN=NN, K=K, backend=backend
+    )
+    return jax.vmap(fn)(stacked)
+
+
+def _run_sharded(stacked: dict, **kw):
+    """vmap the batch axis; additionally pmap-shard it across host devices
+    when more than one is available (e.g. CI/benchmarks force 2+ CPU devices
+    via --xla_force_host_platform_device_count) and it divides evenly."""
+    B = stacked["link"].shape[0]
+    D = jax.local_device_count()
+    while D > 1 and B % D:
+        D -= 1
+    if D <= 1:
+        return _run_batch(stacked, **kw)
+    fn = jax.pmap(
+        jax.vmap(functools.partial(_run_one, **kw)), axis_name="shard"
+    )
+    shaped = {
+        k: jnp.reshape(v, (D, B // D) + v.shape[1:])
+        for k, v in stacked.items()
+    }
+    out = fn(shaped)
+    return {k: jnp.reshape(v, (B,) + v.shape[2:]) for k, v in out.items()}
+
+
+@dataclass
+class XSimResults:
+    """Batched results over a (workloads x algos) grid.
+
+    ``b = w * len(algos) + a`` indexes the flat batch axis. ``stats(w, a)``
+    adapts one cell to the host simulator's ``SimStats`` (same counter
+    semantics; ``cycles`` is the fixed scan length, so compare dynamic
+    *energy* across simulators, not per-cycle power).
+    """
+
+    cfg: NoCConfig
+    algos: tuple[str, ...]
+    horizons: np.ndarray  # (W,) int
+    warmup: int
+    cycles: int  # scan length T
+    slots: int  # final slot-pool size K
+    traffic: dict  # stacked compile tensors, numpy, leading axis B
+    dtime: np.ndarray  # (B, P, S) int32
+    ctr: np.ndarray  # (B, len(CTR)) int32
+    crel: np.ndarray  # (B, C) bool
+    wall_s: float  # host compile + device execute, seconds
+
+    def _b(self, w: int, a: int) -> int:
+        return w * len(self.algos) + a
+
+    def latencies(self, w: int, a: int) -> list[int]:
+        """Per-delivery latencies of measured packets (warmup window)."""
+        b = self._b(w, a)
+        enq = self.traffic["enqueue"][b]
+        measured = (
+            self.traffic["valid"][b]
+            & (enq >= self.warmup)
+            & (enq < self.horizons[w])
+        )
+        hit = (
+            self.traffic["deliver"][b]
+            & (self.dtime[b] >= 0)
+            & measured[:, None]
+        )
+        return (self.dtime[b] - enq[:, None])[hit].tolist()
+
+    def avg_latency(self, w: int, a: int) -> float:
+        lats = self.latencies(w, a)
+        return sum(lats) / max(1, len(lats))
+
+    def avg_latency_matrix(self) -> np.ndarray:
+        W = len(self.horizons)
+        return np.array(
+            [[self.avg_latency(w, a) for a in range(len(self.algos))]
+             for w in range(W)]
+        )
+
+    def delivered_sets(self, w: int, a: int) -> dict[int, set[int]]:
+        """pid -> set of delivered node indices (for host-sim parity)."""
+        b = self._b(w, a)
+        hit = self.traffic["deliver"][b] & (self.dtime[b] >= 0)
+        node = self.traffic["node"][b]
+        out: dict[int, set[int]] = {}
+        for p in np.flatnonzero(self.traffic["valid"][b]):
+            out[int(p)] = {int(n) for n in node[p][hit[p]]}
+        return out
+
+    def packets_created(self, w: int, a: int) -> int:
+        """Packets that entered an NI lane queue (host-sim semantics: every
+        root whose enqueue time fell inside the run, plus released children).
+        """
+        b = self._b(w, a)
+        tr = self.traffic
+        roots = (
+            tr["valid"][b] & (tr["parent"][b] < 0)
+            & (tr["enqueue"][b] < self.cycles)
+        )
+        return int(roots.sum()) + int(self.crel[b].sum())
+
+    def all_drained(self, w: int, a: int) -> bool:
+        st = self.stats(w, a)
+        return st.packets_finished == st.packets_created
+
+    def slots_hwm(self) -> int:
+        """Max in-flight worms across the batch (for presizing ``slots``)."""
+        return int(self.ctr[:, CTR.index("slots_hwm")].max())
+
+    def stats(self, w: int, a: int) -> SimStats:
+        b = self._b(w, a)
+        st = SimStats(latencies=sorted(self.latencies(w, a)))
+        for i, name in enumerate(CTR):
+            if hasattr(st, name):  # slots_hwm is xsim-only
+                setattr(st, name, int(self.ctr[b, i]))
+        st.packets_created = self.packets_created(w, a)
+        st.cycles = self.cycles
+        return st
+
+
+def _slot_bound(cfg: NoCConfig, num_nodes: int, num_links: int) -> int:
+    """K that can never overflow: every in-network worm holds >= 1 VC, plus
+    one possible lane front per lane."""
+    return 2 * cfg.vcs_per_class * num_links + 2 * num_nodes
+
+
+def xsimulate(
+    cfg: NoCConfig,
+    workloads: list[Workload],
+    algos: tuple[str, ...] = ("MP", "NMP", "DPM"),
+    *,
+    warmup: int | None = None,
+    drain_grace: int | None = None,
+    backend: str | None = None,
+    slots: int | None = None,
+    pad_packets: int | None = None,
+    pad_stages: int | None = None,
+) -> XSimResults:
+    """Simulate every (workload, algo) pair in one vmapped device dispatch."""
+    warmup = cfg.warmup if warmup is None else warmup
+    drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
+    backend = resolve_backend(backend)
+    t0 = time.monotonic()
+    traffics: list[CompiledTraffic] = []
+    for wl in workloads:
+        for algo in algos:
+            traffics.append(
+                compile_workload(
+                    cfg, wl, algo,
+                    pad_packets=pad_packets, pad_stages=pad_stages,
+                )
+            )
+    ref, stacked = stack_traffic(traffics)
+    T = max(wl.horizon for wl in workloads) + drain_grace
+    P = stacked["link"].shape[1]
+    cap = min(P, _slot_bound(cfg, ref.num_nodes, ref.num_links))
+    K = min(cap, 256) if slots is None else min(slots, cap)
+    stacked_j = {k: jnp.asarray(v) for k, v in stacked.items()}
+    kw = dict(
+        T=T, F=cfg.flits_per_packet, V=cfg.vcs_per_class,
+        BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes,
+        backend=backend,
+    )
+    while True:
+        out = _run_sharded(stacked_j, K=K, **kw)
+        out = jax.tree_util.tree_map(np.asarray, out)  # blocks until ready
+        if not out["overflow"].any() or K >= cap:
+            break
+        K = min(max(K + K // 2, K + 64), cap)  # grow the pool and rerun
+    assert not out["overflow"].any(), "slot pool exceeded its capacity bound"
+    wall = time.monotonic() - t0
+    return XSimResults(
+        cfg=cfg,
+        algos=tuple(algos),
+        horizons=np.array([wl.horizon for wl in workloads]),
+        warmup=warmup,
+        cycles=T,
+        slots=K,
+        traffic=stacked,
+        dtime=out["dtime"],
+        ctr=out["ctr"],
+        crel=out["crel"],
+        wall_s=wall,
+    )
+
+
+def latency_vs_rate_batched(
+    cfg: NoCConfig,
+    rates: list[float],
+    algos: tuple[str, ...] = ("MP", "NMP", "DPM"),
+    cycles: int = 1500,
+    seed: int = 0,
+    **kw,
+) -> tuple[dict[str, list[tuple[float, float]]], XSimResults]:
+    """The fig6 latency-vs-injection-rate sweep as one batched call.
+
+    Returns ``({algo: [(rate, avg_latency), ...]}, results)``. Unlike the
+    host-sim ``latency_vs_rate`` there is no early saturation cut-off: every
+    (rate, algo) point costs the same inside the vmapped scan.
+    """
+    from ..traffic import synthetic_workload
+
+    wls = [synthetic_workload(cfg, r, cycles, seed=seed) for r in rates]
+    res = xsimulate(cfg, wls, algos, **kw)
+    curves = {
+        algo: [(rates[w], res.avg_latency(w, a)) for w in range(len(rates))]
+        for a, algo in enumerate(algos)
+    }
+    return curves, res

@@ -17,6 +17,9 @@ from repro.kernels.dpm_cost.ops import dpm_plan, total_plan_cost
 from repro.kernels.dpm_cost.ref import dpm_cost_table_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.noc_step.noc_step import NOC_INF, segmented_min
+from repro.kernels.noc_step.ops import arbitrate
+from repro.kernels.noc_step.ref import segmented_min_ref
 from repro.kernels.ssd.ops import ssd_scan_pallas
 from repro.kernels.ssd.ref import ssd_reference
 
@@ -109,6 +112,55 @@ def test_ssd_kernel_sweep(shape, dtype):
     np.testing.assert_allclose(
         np.asarray(h, np.float32), np.asarray(hr, np.float32), atol=atol
     )
+
+
+# ---------------------------------------------------------------------------
+# noc_step (xsim arbitration segmented-min)
+# ---------------------------------------------------------------------------
+SEGMIN_SHAPES = [
+    # (num candidates, num segments)
+    (64, 7),
+    (1000, 256),
+    (4096, 64),
+    (37, 300),  # more segments than candidates
+    (512, 320),  # the link+ejection fused id space of an 8x8 mesh
+]
+
+
+@pytest.mark.parametrize("shape", SEGMIN_SHAPES)
+def test_noc_step_segmented_min_pallas_vs_ref(shape):
+    N, L = shape
+    rng = np.random.default_rng(N * L)
+    keys = rng.integers(0, 2**22, N).astype(np.int32)
+    keys[rng.random(N) < 0.3] = NOC_INF  # masked (no-candidate) entries
+    segs = rng.integers(0, L, N).astype(np.int32)
+    out_k = segmented_min(jnp.asarray(keys), jnp.asarray(segs), L,
+                          interpret=True)
+    out_r = segmented_min_ref(jnp.asarray(keys), jnp.asarray(segs), L)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    # empty segments must hold exactly NOC_INF on both paths
+    empty = np.setdiff1d(np.arange(L), segs[keys < NOC_INF])
+    assert (np.asarray(out_r)[empty] == NOC_INF).all()
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_noc_step_arbitrate_one_winner_per_resource(backend):
+    rng = np.random.default_rng(9)
+    N, L = 777, 61
+    keys = jnp.asarray(rng.permutation(N).astype(np.int32))  # unique
+    segs = jnp.asarray(rng.integers(0, L, N).astype(np.int32))
+    adm = jnp.asarray(rng.random(N) < 0.4)
+    win = np.asarray(arbitrate(adm, keys, segs, L, backend=backend))
+    assert (win & ~np.asarray(adm)).sum() == 0  # winners are admissible
+    for seg in range(L):
+        mask = (np.asarray(segs) == seg) & np.asarray(adm)
+        if mask.any():
+            # exactly the min-key admissible candidate wins
+            expect = np.flatnonzero(mask)[np.asarray(keys)[mask].argmin()]
+            assert win[np.asarray(segs) == seg].sum() == 1
+            assert win[expect]
+        else:
+            assert win[np.asarray(segs) == seg].sum() == 0
 
 
 # ---------------------------------------------------------------------------

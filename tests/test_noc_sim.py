@@ -125,6 +125,27 @@ def test_power_counters_track_hops():
     assert st_dpm.dyn_energy_pj(e) < st_mu.dyn_energy_pj(e)
 
 
+def test_parsec_trace_stable_across_processes():
+    """fig8 regression: the per-benchmark seed must come from a stable digest
+    (zlib.crc32), not salted ``hash(str)`` — pin a literal trace prefix so a
+    PYTHONHASHSEED-style nondeterminism can never creep back in."""
+    cfg = NoCConfig()
+    wl = parsec_workload(cfg, "blackscholes", 400, seed=1)
+    assert len(wl.requests) == 374
+    prefix = [(r.time, r.src, tuple(r.dests)) for r in wl.requests[:5]]
+    assert prefix == [
+        (0, (3, 0), ((1, 6),)),
+        (0, (2, 1), ((7, 6),)),
+        (2, (4, 5), ((7, 2),)),
+        (4, (5, 4), ((5, 5),)),
+        (5, (2, 3), ((7, 3),)),
+    ]
+    wl2 = parsec_workload(cfg, "fluidanimate", 300, seed=7)
+    assert len(wl2.requests) == 783
+    r0 = wl2.requests[0]
+    assert (r0.time, r0.src, tuple(r0.dests)) == (0, (7, 0), ((0, 3),))
+
+
 @pytest.mark.parametrize("bench", ["blackscholes", "fluidanimate"])
 def test_parsec_workloads_run(bench):
     cfg = NoCConfig()
