@@ -10,19 +10,20 @@ import pathlib
 
 from repro.noc import DEST_RANGES
 
-from .noc_common import ALGOS, run_curve, sweep_rates
+from .noc_common import resolve_algos, run_curve, sweep_rates
 
 CACHE = pathlib.Path(__file__).parent / "results" / "fig6.json"
 
 
-def run(quick: bool = False, cycles: int | None = None):
+def run(quick: bool = False, cycles: int | None = None, algos=None):
     cycles = cycles or (800 if quick else 1500)
     rates = sweep_rates(quick)
+    algos = resolve_algos(algos)
     rows = []
     data = {}
     for dr in DEST_RANGES:
         # measurement window comes from NoCConfig defaults (DESIGN.md §5)
-        curves, saturated, zero = run_curve(dr, rates, cycles)
+        curves, saturated, zero = run_curve(dr, rates, cycles, algos=algos)
         data[str(dr)] = {
             "curves": {
                 str(r): {a: v[:2] for a, v in row.items()}
@@ -41,7 +42,7 @@ def run(quick: bool = False, cycles: int | None = None):
                 )
         # per-range summary: DPM best latency at the last rate all algos live
         common = [
-            r for r, row in curves.items() if len(row) == len(ALGOS)
+            r for r, row in curves.items() if len(row) == len(algos)
         ]
         if common:
             r = common[-1]

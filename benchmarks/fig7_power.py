@@ -9,7 +9,7 @@ import time
 
 from repro.noc import DEST_RANGES, NoCConfig, simulate, synthetic_workload
 
-from .noc_common import ALGOS
+from .noc_common import resolve_algos
 
 
 def _mu_saturation_rate(cfg, cycles, seed=3, factor=4.0):
@@ -23,15 +23,16 @@ def _mu_saturation_rate(cfg, cycles, seed=3, factor=4.0):
     return 0.12
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, algos=None):
     cycles = 700 if quick else 1200
+    algos = resolve_algos(algos)
     rows = []
     for dr in DEST_RANGES:
         cfg = NoCConfig(dest_range=dr)
         sat = _mu_saturation_rate(cfg, cycles)
         wl = synthetic_workload(cfg, sat, cycles, seed=7)
         power = {}
-        for algo in ALGOS:
+        for algo in algos:
             t0 = time.monotonic()
             st = simulate(cfg, wl, algo)
             power[algo] = st.dyn_power(cfg.energy)
@@ -43,7 +44,9 @@ def run(quick: bool = False):
                     f"dyn_power_pj_per_cycle={power[algo]:.1f}",
                 )
             )
-        for algo in ("MP", "NMP", "DPM"):
+        if "MU" not in power:  # paper's baseline absent from --algos
+            continue
+        for algo in (a for a in algos if a != "MU"):
             impr = 100.0 * (1 - power[algo] / power["MU"])
             rows.append(
                 (

@@ -11,10 +11,18 @@ import time
 
 from repro.noc import PARSEC_PROFILES, NoCConfig, parsec_workload, simulate
 
+from .noc_common import resolve_algos
 
-def run(quick: bool = False):
+
+def run(quick: bool = False, algos=None):
     cycles = 800 if quick else 2000
     base_rate = 0.085
+    # the paper's fig8 compares against MP, not MU (MU saturates at this
+    # trace load) — default to the registry figure set minus MU
+    if algos is None:
+        algos = [a for a in resolve_algos(None) if a != "MU"]
+    else:
+        algos = resolve_algos(algos)
     rows = []
     for bench in PARSEC_PROFILES:
         # measurement window comes from NoCConfig (shared with noc.xsim)
@@ -22,7 +30,7 @@ def run(quick: bool = False):
         wl = parsec_workload(cfg, bench, cycles, base_rate=base_rate, seed=5)
         lat = {}
         pwr = {}
-        for algo in ("MP", "NMP", "DPM"):
+        for algo in algos:
             t0 = time.monotonic()
             st = simulate(cfg, wl, algo)
             lat[algo], pwr[algo] = st.avg_latency, st.dyn_power(cfg.energy)
@@ -33,7 +41,9 @@ def run(quick: bool = False):
                     f"latency={lat[algo]:.2f};power={pwr[algo]:.1f}",
                 )
             )
-        for algo in ("NMP", "DPM"):
+        if "MP" not in lat:  # comparison baseline absent from --algos
+            continue
+        for algo in (a for a in algos if a != "MP"):
             rows.append(
                 (
                     f"fig8/{bench}/{algo}_vs_MP",

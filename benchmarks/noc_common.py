@@ -1,11 +1,31 @@
-"""Shared helpers for the NoC paper-figure benchmarks."""
+"""Shared helpers for the NoC paper-figure benchmarks.
+
+Algorithm sets resolve through the routing-algorithm registry
+(``repro.core.algo``) — the paper's fig6/7 comparison set is every
+registered algorithm carrying the "fig" tag (MU/MP/NMP/DPM out of the box),
+so a newly registered algorithm joins the sweeps without editing any
+benchmark, and ``benchmarks/run.py --algos`` overrides the set everywhere.
+"""
 from __future__ import annotations
 
 import time
 
+from repro.core.algo import available_algorithms, get_algorithm
 from repro.noc import NoCConfig, simulate, synthetic_workload
 
-ALGOS = ["MU", "MP", "NMP", "DPM"]
+
+def fig_algos(topology: str = "mesh") -> list[str]:
+    """The paper-figure comparison set, resolved from the registry."""
+    return available_algorithms(topology, tag="fig")
+
+
+def resolve_algos(algos, topology: str = "mesh") -> list[str]:
+    """Normalize a caller-supplied algorithm list (names validated via the
+    registry, unknown names raise listing what exists) or fall back to the
+    paper's figure set."""
+    if algos is None:
+        return fig_algos(topology)
+    return [get_algorithm(a).name for a in algos]
 
 
 def sweep_rates(quick: bool) -> list[float]:
@@ -20,6 +40,7 @@ def run_curve(
     cycles: int,
     seed: int = 3,
     saturation_factor: float = 4.0,
+    algos: list[str] | None = None,
 ):
     """(rate -> {algo: (latency, power_pj_per_cycle)}) + saturation rates.
 
@@ -27,14 +48,15 @@ def run_curve(
     defaults — the single source of truth shared with ``noc.xsim``.
     """
     cfg = NoCConfig(dest_range=dest_range)
+    algos = resolve_algos(algos, cfg.topology)
     out: dict[float, dict[str, tuple[float, float]]] = {}
-    saturated: dict[str, float | None] = {a: None for a in ALGOS}
+    saturated: dict[str, float | None] = {a: None for a in algos}
     zero_load: dict[str, float] = {}
-    live = set(ALGOS)
+    live = set(algos)
     for rate in rates:
         wl = synthetic_workload(cfg, rate, cycles, seed=seed)
         row = {}
-        for algo in list(live):
+        for algo in [a for a in algos if a in live]:
             t0 = time.monotonic()
             st = simulate(cfg, wl, algo)
             lat = st.avg_latency

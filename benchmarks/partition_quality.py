@@ -1,30 +1,50 @@
 """Beyond-paper analysis: partition quality vs the restricted-family optimum,
-and the Definition-2 source-leg ablation (DESIGN.md §2)."""
+the Definition-2 source-leg ablation (DESIGN.md §2), and the cost-model axis
+(DESIGN.md §6): DPM-E (Algorithm 1 under the energy objective) priced against
+hop-optimizing DPM with the energy model, and both against the restricted
+optimum under their own objectives."""
 from __future__ import annotations
 
 import random
 import time
 
-from repro.core import brute_force_partition, dpm_partition, grid, plan
+from repro.core import (
+    brute_force_partition,
+    dpm_partition,
+    get_cost_model,
+    grid,
+    plan,
+)
+
+from .noc_common import resolve_algos
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, algos=None):
     g = grid(8)
+    # the paper set plus DPM-E — the registry's proof that a new algorithm
+    # reaches the benchmarks without editing them (only --algos overrides)
+    algos = resolve_algos(algos) + ([] if algos is not None else ["DPM-E"])
+    energy = get_cost_model("energy")
     rng = random.Random(17)
     nodes = [(x, y) for x in range(8) for y in range(8)]
     n_inst = 150 if quick else 400
     rows = []
     for dr in ((2, 5), (4, 8), (10, 16)):
-        tot = {"MU": 0, "MP": 0, "NMP": 0, "DPM": 0, "DPM_noleg": 0}
+        tot = {a: 0 for a in algos}
+        tot["DPM_noleg"] = 0
+        energy_pj = {a: 0.0 for a in algos}
         opt_gap = 0
+        opt_gap_energy = 0.0
         opt_n = 0
         t0 = time.monotonic()
         for _ in range(n_inst):
             k = rng.randint(*dr)
             picks = rng.sample(nodes, k + 1)
             src, dests = picks[0], picks[1:]
-            for a in ("MU", "MP", "NMP", "DPM"):
-                tot[a] += plan(a, g, src, dests).total_hops
+            for a in algos:
+                p = plan(a, g, src, dests)
+                tot[a] += p.total_hops
+                energy_pj[a] += energy.plan_cost(g, p)
             tot["DPM_noleg"] += dpm_partition(
                 g, src, dests, include_source_leg=False
             ).total_cost(True)
@@ -32,6 +52,9 @@ def run(quick: bool = False):
                 r = dpm_partition(g, src, dests)
                 opt, _ = brute_force_partition(g, src, dests)
                 opt_gap += r.total_cost() - opt
+                re = dpm_partition(g, src, dests, cost_model="energy")
+                opt_e, _ = brute_force_partition(g, src, dests, cost_model="energy")
+                opt_gap_energy += re.total_cost() - opt_e
                 opt_n += 1
         wall = (time.monotonic() - t0) * 1e6 / n_inst
         for a, v in tot.items():
@@ -42,12 +65,28 @@ def run(quick: bool = False):
                     f"avg_hops={v / n_inst:.2f}",
                 )
             )
+        for a in algos:
+            rows.append(
+                (
+                    f"partition_quality/range{dr[0]}-{dr[1]}/{a}_energy",
+                    0.0,
+                    f"avg_energy_pj={energy_pj[a] / n_inst:.0f}",
+                )
+            )
         if opt_n:
             rows.append(
                 (
                     f"partition_quality/range{dr[0]}-{dr[1]}/opt_gap",
                     0.0,
                     f"mean_gap_vs_restricted_optimum={opt_gap / opt_n:.3f}",
+                )
+            )
+            rows.append(
+                (
+                    f"partition_quality/range{dr[0]}-{dr[1]}/opt_gap_energy",
+                    0.0,
+                    f"mean_energy_gap_vs_restricted_optimum="
+                    f"{opt_gap_energy / opt_n:.3f}",
                 )
             )
     return rows

@@ -7,6 +7,7 @@ summarized by benchmarks/roofline_table.py), not from wall-time here.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -20,7 +21,20 @@ def main() -> None:
         help="comma-separated module names "
         "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim)",
     )
+    ap.add_argument(
+        "--algos",
+        default=None,
+        help="comma-separated routing algorithms (validated against the "
+        "repro.core.algo registry; default: each suite's registry query)",
+    )
     args = ap.parse_args()
+
+    algos = None
+    if args.algos:
+        from repro.core.algo import get_algorithm
+
+        # unknown names raise here, listing what is registered
+        algos = [get_algorithm(a.strip()).name for a in args.algos.split(",")]
 
     from . import (
         dist_collectives,
@@ -50,9 +64,12 @@ def main() -> None:
     for name, fn in suites.items():
         if name not in only:
             continue
+        kwargs = {"quick": args.quick}
+        if algos is not None and "algos" in inspect.signature(fn).parameters:
+            kwargs["algos"] = algos
         t0 = time.monotonic()
         try:
-            rows = fn(quick=args.quick)
+            rows = fn(**kwargs)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             continue

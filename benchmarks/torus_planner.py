@@ -10,9 +10,10 @@ from __future__ import annotations
 import random
 import time
 
-from repro.core import grid, plan, torus
-from repro.core.planner import PLANNERS
+from repro.core import available_algorithms, grid, plan, torus
 from repro.noc import NoCConfig, WormholeSim
+
+from .noc_common import resolve_algos
 
 
 def _instances(count: int, seed: int = 0):
@@ -25,11 +26,17 @@ def _instances(count: int, seed: int = 0):
     return out
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, algos=None):
     rows = []
     insts = _instances(40 if quick else 200, seed=17)
     g, t = grid(8), torus(8)
-    for algo in PLANNERS:
+    # every registered algorithm that can route on both geometries
+    if algos is None:
+        algos = [a for a in available_algorithms("torus")
+                 if a in available_algorithms("mesh")]
+    else:
+        algos = resolve_algos(algos, "torus")
+    for algo in algos:
         hops = {}
         for topo_name, topo in (("mesh", g), ("torus", t)):
             t0 = time.monotonic()

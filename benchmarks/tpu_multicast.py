@@ -14,11 +14,16 @@ import time
 
 from repro.dist.multicast import Torus, dp_broadcast_schedule, schedule_multicasts
 
+from .noc_common import resolve_algos
+
 MB = 2**20
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, algos=None):
     rows = []
+    # default: direct-send vs static multipath vs DPM (the collective-
+    # relevant subset of the registry); --algos overrides everywhere
+    algos = ["MU", "MP", "DPM"] if algos is None else resolve_algos(algos, "torus")
     t = Torus(16, 16)
     cases = {
         "dp_column_bcast": [((0, 0), [(0, y) for y in range(1, 16)])],
@@ -41,7 +46,7 @@ def run(quick: bool = False):
     payloads = {"dp_column_bcast": 64 * MB, "cluster4x4_bcast": 16 * MB,
                 "moe_top6_dispatch": 4 * MB}
     for case, reqs in cases.items():
-        for algo in ("MU", "MP", "DPM"):
+        for algo in algos:
             t0 = time.monotonic()
             sched = schedule_multicasts(t, reqs, algo)
             cost = sched.cost(payloads[case])
@@ -54,7 +59,7 @@ def run(quick: bool = False):
                 )
             )
     # 1-D data-axis broadcast (ring) across schedulers
-    for algo in ("MU", "DPM"):
+    for algo in (a for a in algos if a != "MP"):  # MP degenerates on a ring
         sched = dp_broadcast_schedule(16, algo)
         cost = sched.cost(128 * MB)
         rows.append(

@@ -48,7 +48,6 @@ def _force_host_devices() -> None:
         f"--xla_force_host_platform_device_count={os.cpu_count() or 1}"
     )
 
-ALGOS = ("MU", "MP", "NMP", "DPM")
 PARITY_CASES = [
     ("mesh-unicast", dict(n=4, multicast_fraction=0.0), 0.05, 100, "MU"),
     ("mesh-multicast", dict(n=5, multicast_fraction=0.5,
@@ -85,7 +84,7 @@ def _parity_case(name, cfg_kw, rate, cycles, algo):
     }
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, algos=None):
     _force_host_devices()
     import jax
 
@@ -93,6 +92,13 @@ def run(quick: bool = False):
     from repro.core.topology import make_topology
     from repro.noc import NoCConfig, simulate, synthetic_workload, xsimulate
 
+    from .noc_common import resolve_algos
+
+    # registry figure set + DPM-E: the sweep doubles as the demonstration
+    # that a cost-model variant rides the batched engine unmodified
+    algos = tuple(
+        resolve_algos(algos) + ([] if algos is not None else ["DPM-E"])
+    )
     cycles = 250 if quick else 600
     rates = (
         [0.06, 0.10, 0.14]
@@ -106,14 +112,14 @@ def run(quick: bool = False):
     g = make_topology(cfg.topology, cfg.n, cfg.m)
     for wl in wls:
         for r in wl.requests:
-            for a in ALGOS:
+            for a in algos:
                 plan(a, g, r.src, r.dests)
 
     # --- sequential Python WormholeSim baseline -------------------------
-    py_curves: dict[str, list] = {a: [] for a in ALGOS}
+    py_curves: dict[str, list] = {a: [] for a in algos}
     t0 = time.monotonic()
     for rate, wl in zip(rates, wls):
-        for algo in ALGOS:
+        for algo in algos:
             st = simulate(cfg, wl, algo)
             py_curves[algo].append((rate, round(st.avg_latency, 2)))
     t_py = time.monotonic() - t0
@@ -121,17 +127,17 @@ def run(quick: bool = False):
     # --- batched xsim: the whole grid through one engine ----------------
     slots = 256 if quick else 384
     t0 = time.monotonic()
-    res = xsimulate(cfg, wls, ALGOS, slots=slots)
+    res = xsimulate(cfg, wls, algos, slots=slots)
     x_curves = {
         algo: [(rates[w], round(float(res.avg_latency(w, a)), 2))
                for w in range(len(rates))]
-        for a, algo in enumerate(ALGOS)
+        for a, algo in enumerate(algos)
     }
     t_x_cold = time.monotonic() - t0
     # sustained: same shapes, XLA executable cached — the marginal cost of
     # the next sweep in a design-space-exploration campaign
     t0 = time.monotonic()
-    xsimulate(cfg, wls, ALGOS, slots=slots)
+    xsimulate(cfg, wls, algos, slots=slots)
     t_x = time.monotonic() - t0
 
     parity = [_parity_case(*case) for case in PARITY_CASES]
@@ -142,8 +148,8 @@ def run(quick: bool = False):
         "sweep": {
             "mesh": "8x8", "dest_range": [10, 16], "cycles": cycles,
             "warmup": cfg.warmup, "drain_grace": cfg.drain_grace,
-            "rates": rates, "algos": list(ALGOS),
-            "points": len(rates) * len(ALGOS),
+            "rates": rates, "algos": list(algos),
+            "points": len(rates) * len(algos),
         },
         "wall_clock_s": {
             "python_wormhole_sequential": round(t_py, 2),
@@ -180,7 +186,7 @@ def run(quick: bool = False):
 
     rows = [
         ("xsim_sweep/python_sequential", t_py * 1e6,
-         f"points={len(rates) * len(ALGOS)}"),
+         f"points={len(rates) * len(algos)}"),
         ("xsim_sweep/xsim_batched", t_x * 1e6,
          f"slots={res.slots};devices={jax.local_device_count()}"),
         ("xsim_sweep/speedup", 0.0,
@@ -192,7 +198,7 @@ def run(quick: bool = False):
             f"sets_equal={p['delivery_sets_equal']};"
             f"latency_dev={p['latency_rel_dev']:.4f}",
         ))
-    for algo in ALGOS:
+    for algo in algos:
         curve = ";".join(f"{r}:{lat}" for r, lat in x_curves[algo])
         rows.append((f"xsim_sweep/curve/{algo}", 0.0, curve))
     return rows

@@ -4,20 +4,23 @@
 
 Full sweeps live in the benchmark harness: python -m benchmarks.run
 """
+from repro.core import available_algorithms
 from repro.noc import NoCConfig, parsec_workload, simulate, synthetic_workload
+
+FIG_ALGOS = available_algorithms("mesh", tag="fig")  # the paper's comparison set
 
 print("latency vs injection rate, dest range 4-8 (Fig. 6 style):")
 cfg = NoCConfig(dest_range=(4, 8))
-print(f"{'rate':>6} " + "".join(f"{a:>8}" for a in ("MU", "MP", "NMP", "DPM")))
+print(f"{'rate':>6} " + "".join(f"{a:>8}" for a in FIG_ALGOS))
 for rate in (0.02, 0.04, 0.06):
     wl = synthetic_workload(cfg, rate, 800, seed=3)
-    lats = [simulate(cfg, wl, a).avg_latency for a in ("MU", "MP", "NMP", "DPM")]
+    lats = [simulate(cfg, wl, a).avg_latency for a in FIG_ALGOS]
     print(f"{rate:>6} " + "".join(f"{latency:8.1f}" for latency in lats))
 
 print("\nfluidanimate-like trace vs MP baseline (Fig. 8 style):")
 cfg = NoCConfig()
 wl = parsec_workload(cfg, "fluidanimate", 1000, base_rate=0.085, seed=5)
-stats = {a: simulate(cfg, wl, a) for a in ("MP", "NMP", "DPM")}
+stats = {a: simulate(cfg, wl, a) for a in FIG_ALGOS if a != "MU"}
 base_lat = stats["MP"].avg_latency
 base_pwr = stats["MP"].dyn_power(cfg.energy)
 for a, st in stats.items():

@@ -2,14 +2,19 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Partitions a multicast destination set with Algorithm 1 (vs MU/MP/NMP).
+1. Partitions a multicast destination set with Algorithm 1 (vs every
+   algorithm in the routing registry, including energy-aware DPM-E).
 2. Runs the flit-level wormhole simulator on the resulting plans.
-3. Plans the same multicast on a 16x16 TPU-pod torus as ppermute rounds.
-4. Resolves model sharding rules and the DPM-planned EP dispatch schedule.
+3. Registers a third-party routing algorithm — one decorator, zero edits
+   anywhere else — and plans/simulates through it.
+4. Plans the same multicast on a 16x16 TPU-pod torus as ppermute rounds.
+5. Resolves model sharding rules and the DPM-planned EP dispatch schedule.
 """
 import random
 
-from repro.core import dpm_partition, grid, plan
+from repro.core import available_algorithms, dpm_partition, grid, plan
+from repro.core.algo import register_algorithm
+from repro.core.routing import greedy_tour
 from repro.dist.multicast import Torus, schedule_multicasts
 from repro.noc import NoCConfig, WormholeSim
 
@@ -30,19 +35,40 @@ for p in res.partitions:
     )
 print(f"  merge iterations: {res.iterations}\n")
 
-print("total hop count by algorithm:")
-for algo in ("MU", "MP", "NMP", "DPM"):
-    print(f"  {algo:4s} {plan(algo, g, src, dests).total_hops}")
+print("total hop count by registered algorithm:")
+for algo in available_algorithms(g):
+    print(f"  {algo:5s} {plan(algo, g, src, dests).total_hops}")
 
 # --- 2. cycle-level simulation --------------------------------------------
 print("\nwormhole latency (single multicast, unloaded 8x8 mesh):")
-for algo in ("MU", "MP", "NMP", "DPM"):
+for algo in available_algorithms(g):
     sim = WormholeSim(NoCConfig())
-    sim.add_plan(plan(algo, g, src, dests), 0)
+    sim.add_request(algo, src, dests, 0)
     st = sim.run(5000)
-    print(f"  {algo:4s} avg per-dest latency {st.avg_latency:.1f} cycles")
+    print(f"  {algo:5s} avg per-dest latency {st.avg_latency:.1f} cycles")
 
-# --- 3. the TPU adaptation -------------------------------------------------
+
+# --- 3. third-party registration ------------------------------------------
+# One decorator publishes an algorithm to every consumer: both simulators,
+# the dist schedulers, and the figure benchmarks (via --algos or the
+# registry default sets). No noc/, dist/, or benchmarks/ file changes.
+@register_algorithm(name="TOUR", topologies=("mesh", "torus"))
+def plan_tour(g, src, dests):
+    """Single nearest-destination-first tour (one worm serves everyone)."""
+    from repro.core import MulticastPlan, PacketPath
+
+    path = greedy_tour(g, src, list(dests))
+    deliveries = list(dict.fromkeys(d for d in path if d in set(dests)))
+    p = MulticastPlan("TOUR", src, list(dests))
+    p.paths.append(PacketPath(path, deliveries))
+    return p
+
+
+print(f"\nregistered TOUR -> {available_algorithms(g)}")
+print(f"  TOUR  {plan('TOUR', g, src, dests).total_hops} hops, "
+      f"covers={plan('TOUR', g, src, dests).check_covers()}")
+
+# --- 4. the TPU adaptation -------------------------------------------------
 t = Torus(16, 16)
 reqs = [((0, 0), [(x, y) for x in range(4) for y in range(4) if (x, y) != (0, 0)])]
 print("\nTPU 16x16 torus: broadcast to a 4x4 pod slice (64 MiB payload):")
@@ -54,7 +80,7 @@ for algo in ("MU", "DPM"):
         f"~{c['time_us']:.0f} us, {c['link_bytes'] / 2**20:.0f} MiB-hops"
     )
 
-# --- 4. the distribution layer --------------------------------------------
+# --- 5. the distribution layer --------------------------------------------
 from repro.dist.multicast import alltoall_schedule  # noqa: E402
 from repro.dist.sharding import abstract_mesh, spec_for_shape  # noqa: E402
 

@@ -4,10 +4,32 @@ Public API:
     MeshGrid, grid                         — mesh geometry + Hamiltonian labels
     Torus, torus, make_topology, Topology  — wraparound torus + the protocol
     basic_partitions, dpm_partition        — Definitions 1-3 + Algorithm 1
-    plan / PLANNERS                        — MU / DP / MP / NMP / DPM planners
+    plan / PLANNERS                        — cached planning facade + legacy view
+    RoutingAlgorithm, register_algorithm,  — pluggable algorithm registry
+    available_algorithms, get_algorithm      (DESIGN.md §6)
+    CostModel, register_cost_model,        — pluggable routing objectives:
+    get_cost_model, available_cost_models    hops / contention / energy
 
 Every planner and routing function takes any Topology (mesh or torus).
+Algorithms and cost models resolve through the ``repro.core.algo`` registry;
+``plan_dpm_e`` (registered as "DPM-E") is DPM optimizing the energy model.
 """
+from .algo import (
+    CostModel,
+    EnergyCost,
+    HopCountCost,
+    LinkContentionCost,
+    RoutingAlgorithm,
+    available_algorithms,
+    available_cost_models,
+    get_algorithm,
+    get_cost_model,
+    register_algorithm,
+    register_cost_model,
+    temporary_algorithm,
+    unregister_algorithm,
+    unregister_cost_model,
+)
 from .grid import Coord, MeshGrid, grid
 from .partition import (
     ALL_CANDIDATE_IDS,
@@ -24,8 +46,11 @@ from .planner import (
     MulticastPlan,
     PacketPath,
     plan,
+    plan_cache_clear,
+    plan_cache_info,
     plan_dp,
     plan_dpm,
+    plan_dpm_e,
     plan_mp,
     plan_mu,
     plan_nmp,
@@ -43,33 +68,50 @@ from .topology import Topology, Torus, make_topology, ring_delta, torus
 __all__ = [
     "ALL_CANDIDATE_IDS",
     "Coord",
+    "CostModel",
     "DPMResult",
+    "EnergyCost",
+    "HopCountCost",
+    "LinkContentionCost",
     "MeshGrid",
     "MulticastPlan",
     "PLANNERS",
     "PacketPath",
     "PartitionCost",
+    "RoutingAlgorithm",
+    "Topology",
+    "Torus",
+    "available_algorithms",
+    "available_cost_models",
     "basic_partitions",
     "brute_force_partition",
     "candidate_cost",
     "dpm_partition",
     "dual_path_cost",
+    "get_algorithm",
+    "get_cost_model",
     "greedy_tour",
     "grid",
     "label_route",
+    "make_topology",
     "multi_unicast_cost",
     "path_multicast",
     "plan",
+    "plan_cache_clear",
+    "plan_cache_info",
     "plan_dp",
     "plan_dpm",
+    "plan_dpm_e",
     "plan_mp",
     "plan_mu",
     "plan_nmp",
+    "register_algorithm",
+    "register_cost_model",
     "representative",
     "ring_delta",
-    "Topology",
-    "Torus",
-    "make_topology",
+    "temporary_algorithm",
     "torus",
+    "unregister_algorithm",
+    "unregister_cost_model",
     "xy_route",
 ]

@@ -10,8 +10,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .algo import CostModel, get_cost_model
 from .grid import Coord, MeshGrid
-from .routing import dual_path_cost, multi_unicast_cost, xy_route
+from .routing import xy_route
 
 # Candidate index sets: 8 singles, 8 consecutive pairs, 8 consecutive triples.
 SINGLE_IDS: list[tuple[int, ...]] = [(i,) for i in range(8)]
@@ -68,17 +69,21 @@ def basic_partitions(
 
 @dataclass
 class PartitionCost:
-    """Cost record for one candidate partition (Definitions 1-2)."""
+    """Cost record for one candidate partition (Definitions 1-2).
+
+    Costs are priced by a ``CostModel`` (repro.core.algo); under the default
+    hop-count model they are the paper's integer hop counts.
+    """
 
     ids: tuple[int, ...]
     dests: list[Coord]
     rep: Coord | None  # representative node R (Definition 1)
-    cost_mu: int  # C_t: multiple unicast from R
-    cost_dp: int  # C_p: dual-path from R
-    source_leg: int  # |S -> R| XY hops
+    cost_mu: float  # C_t: multiple unicast from R
+    cost_dp: float  # C_p: dual-path from R
+    source_leg: float  # S -> R XY leg, priced by the model
     mode: str  # "MU" | "DP" — the cheaper of the two
 
-    def cost(self, include_source_leg: bool) -> int:
+    def cost(self, include_source_leg: bool) -> float:
         base = min(self.cost_mu, self.cost_dp)
         return base + (self.source_leg if include_source_leg else 0)
 
@@ -92,21 +97,28 @@ def representative(g: MeshGrid, src: Coord, dests: list[Coord]) -> Coord:
 
 
 def candidate_cost(
-    g: MeshGrid, src: Coord, ids: tuple[int, ...], dests: list[Coord]
+    g: MeshGrid,
+    src: Coord,
+    ids: tuple[int, ...],
+    dests: list[Coord],
+    cost_model: CostModel | str | None = None,
 ) -> PartitionCost:
     """Definition 2: C = min(C_t, C_p), measured from the representative R.
 
-    C_t = sum of Manhattan(R, d); C_p = dual-path hop count from R. When the
-    two tie, MU is preferred (the paper: "the overhead of computing D_H, D_L
-    is eliminated using MU").
+    Under the default hop-count model C_t = sum of Manhattan(R, d) and C_p =
+    dual-path hop count from R, exactly as printed; any registered
+    ``CostModel`` (name or instance) re-prices both plus the S->R leg. When
+    the two tie, MU is preferred (the paper: "the overhead of computing D_H,
+    D_L is eliminated using MU").
     """
+    cm = get_cost_model(cost_model)
     if not dests:
         return PartitionCost(ids, [], None, 0, 0, 0, "MU")
     rep = representative(g, src, dests)
     rest = [d for d in dests if d != rep]
-    cost_mu = multi_unicast_cost(g, rep, rest)
-    cost_dp = dual_path_cost(g, rep, rest)
-    source_leg = len(xy_route(g, src, rep)) - 1
+    cost_mu = cm.multi_unicast_cost(g, rep, rest)
+    cost_dp = cm.dual_path_cost(g, rep, rest)
+    source_leg = cm.route_cost(g, xy_route(g, src, rep))
     mode = "MU" if cost_mu <= cost_dp else "DP"
     return PartitionCost(ids, list(dests), rep, cost_mu, cost_dp, source_leg, mode)
 
@@ -117,9 +129,9 @@ class DPMResult:
 
     partitions: list[PartitionCost]
     iterations: int  # greedy merge iterations taken (paper: converges <= 4)
-    savings_trace: list[tuple[tuple[int, ...], int]] = field(default_factory=list)
+    savings_trace: list[tuple[tuple[int, ...], float]] = field(default_factory=list)
 
-    def total_cost(self, include_source_leg: bool = True) -> int:
+    def total_cost(self, include_source_leg: bool = True) -> float:
         return sum(p.cost(include_source_leg) for p in self.partitions)
 
 
@@ -129,6 +141,7 @@ def dpm_partition(
     dests: list[Coord],
     include_source_leg: bool = True,
     max_merge: int = 3,
+    cost_model: CostModel | str | None = None,
 ) -> DPMResult:
     """Algorithm 1: Dynamic Partition Merging.
 
@@ -138,7 +151,11 @@ def dpm_partition(
     ``max_merge`` is the paper's limit of 3 consecutive partitions.
     ``g`` may be a MeshGrid or a Torus; all distances, partitions, and
     routes follow the topology.
+    ``cost_model`` is the objective the merge loop optimizes — the paper's
+    hop counting by default; any registered model (e.g. "energy") re-prices
+    every candidate, which is the lever DPM-E pulls (DESIGN.md §6).
     """
+    cm = get_cost_model(cost_model)
     parts = basic_partitions(src, dests, g)
 
     candidate_ids = list(SINGLE_IDS)
@@ -152,10 +169,10 @@ def dpm_partition(
         union: list[Coord] = []
         for i in ids:
             union.extend(parts[i])
-        costs[ids] = candidate_cost(g, src, ids, union)
+        costs[ids] = candidate_cost(g, src, ids, union, cm)
 
     # Definition 3: saving of each merged candidate vs its components.
-    savings: dict[tuple[int, ...], int] = {}
+    savings: dict[tuple[int, ...], float] = {}
     for ids in candidate_ids:
         if len(ids) == 1:
             continue
@@ -203,24 +220,30 @@ def dpm_partition(
 
 
 def brute_force_partition(
-    g: MeshGrid, src: Coord, dests: list[Coord], include_source_leg: bool = True
-) -> tuple[int, list[tuple[int, ...]]]:
+    g: MeshGrid,
+    src: Coord,
+    dests: list[Coord],
+    include_source_leg: bool = True,
+    cost_model: CostModel | str | None = None,
+) -> tuple[float, list[tuple[int, ...]]]:
     """Exact minimum over DPM's candidate family (exponential; tests only).
 
     Enumerates every exact cover of the non-empty basic partitions by
     candidate index sets and returns (min cost, chosen ids). This is the
-    optimum of the *restricted* set-cover the paper's heuristic addresses.
+    optimum of the *restricted* set-cover the paper's heuristic addresses,
+    under whichever ``cost_model`` prices the candidates.
     """
+    cm = get_cost_model(cost_model)
     parts = basic_partitions(src, dests, g)
     nonempty = frozenset(i for i in range(8) if parts[i])
-    costs: dict[tuple[int, ...], int] = {}
+    costs: dict[tuple[int, ...], float] = {}
     for ids in ALL_CANDIDATE_IDS:
         union: list[Coord] = []
         for i in ids:
             union.extend(parts[i])
-        costs[ids] = candidate_cost(g, src, ids, union).cost(include_source_leg)
+        costs[ids] = candidate_cost(g, src, ids, union, cm).cost(include_source_leg)
 
-    best = (10**9, [])
+    best = (float("inf"), [])
 
     def rec(remaining: frozenset[int], acc_cost: int, acc: list[tuple[int, ...]]):
         nonlocal best

@@ -13,8 +13,19 @@ reference, validated against this module.
 from __future__ import annotations
 
 import functools
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 
+from .algo import (
+    CostModel,
+    available_algorithms,
+    get_algorithm,
+    get_cost_model,
+    is_registered_algorithm,
+    is_registered_cost_model,
+    on_registry_change,
+    register_algorithm,
+)
 from .grid import Coord, MeshGrid
 from .partition import basic_partitions, dpm_partition
 from .routing import greedy_tour, path_multicast, xy_route
@@ -131,14 +142,18 @@ def plan_dpm(
     dests: list[Coord],
     include_source_leg: bool = True,
     max_merge: int = 3,
+    *,
+    cost_model: CostModel | str | None = None,
 ) -> MulticastPlan:
     """DPM: Algorithm 1 partitions, then per-partition delivery:
 
     S --XY--> R, then from R either dual-path (one packet continues) or
-    multiple unicast (child packets re-injected at R).
+    multiple unicast (child packets re-injected at R). ``cost_model`` is
+    the objective Algorithm 1's merge comparisons optimize (default: the
+    paper's hop counting).
     """
     plan = MulticastPlan("DPM", src, list(dests))
-    result = dpm_partition(g, src, dests, include_source_leg, max_merge)
+    result = dpm_partition(g, src, dests, include_source_leg, max_merge, cost_model)
     for part in result.partitions:
         if not part.dests:
             continue
@@ -179,29 +194,121 @@ def plan_dpm(
     return plan
 
 
-PLANNERS = {
-    "MU": plan_mu,
-    "DP": plan_dp,
-    "MP": plan_mp,
-    "NMP": plan_nmp,
-    "DPM": plan_dpm,
-}
+def plan_dpm_e(
+    g: MeshGrid,
+    src: Coord,
+    dests: list[Coord],
+    *,
+    cost_model: CostModel | str | None = None,
+) -> MulticastPlan:
+    """DPM-E: Algorithm 1 merging under the dynamic-energy objective.
+
+    Identical machinery to DPM; only the cost model the merge loop compares
+    candidates with changes (default "energy" — DESIGN.md §6). Shipped as
+    the proof that a new algorithm is one registration: no consumer file
+    (noc/, dist/, benchmarks/) mentions it by name.
+    """
+    p = plan_dpm(g, src, dests, cost_model="energy" if cost_model is None else cost_model)
+    p.algorithm = "DPM-E"
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Registry-backed cached facade
+# ---------------------------------------------------------------------------
+register_algorithm(plan_mu, name="MU", tags=("fig",))
+register_algorithm(plan_dp, name="DP")
+register_algorithm(plan_mp, name="MP", tags=("fig",))
+register_algorithm(plan_nmp, name="NMP", tags=("fig",))
+register_algorithm(plan_dpm, name="DPM", cost_sensitive=True, tags=("fig",))
+register_algorithm(
+    plan_dpm_e, name="DPM-E", cost_sensitive=True, default_cost_model="energy"
+)
 
 
 @functools.lru_cache(maxsize=200_000)
 def _plan_cached(
-    kind: str, n: int, m: int, algo: str, src: Coord, dests: tuple[Coord, ...]
+    kind: str,
+    n: int,
+    m: int,
+    algo: str,
+    cost_model: str,
+    src: Coord,
+    dests: tuple[Coord, ...],
 ):
-    return PLANNERS[algo](make_topology(kind, n, m), src, list(dests))
+    a = get_algorithm(algo)
+    return a.plan(
+        make_topology(kind, n, m), src, list(dests),
+        cost_model=get_cost_model(cost_model or a.default_cost_model),
+    )
 
 
-def plan(algo: str, g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
+on_registry_change(lambda: _plan_cached.cache_clear())
+
+
+def plan_cache_info():
+    """(hits, misses, maxsize, currsize) of the shared plan cache."""
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()
+
+
+def plan(
+    algo: "str | object",
+    g: MeshGrid,
+    src: Coord,
+    dests: list[Coord],
+    cost_model: CostModel | str | None = None,
+) -> MulticastPlan:
     """Cached planner entry point (plans are deterministic per instance).
 
-    The cache key is normalized — (topology kind, n, rows, algo, src, sorted
-    unique dests) — so grid(8) and grid(8, 8) share one entry and mesh/torus
-    plans of the same dimensions never collide.
+    ``algo`` is a registered algorithm name (or a ``RoutingAlgorithm``
+    instance); ``cost_model`` a registered model name or instance, defaulting
+    to the algorithm's own objective. The cache key is normalized —
+    (topology kind, n, rows, algorithm, cost-model, src, sorted unique
+    dests) — so grid(8) and grid(8, 8) share one entry, mesh/torus plans of
+    the same dimensions never collide, and two cost models never alias one
+    entry. Cost-insensitive algorithms share one entry across models.
+    Unregistered algorithm/cost-model instances plan uncached (the name key
+    could not be trusted to resolve back to them).
     """
-    return _plan_cached(
-        g.kind, g.n, g.rows, algo, src, tuple(sorted(set(dests)))
+    a = get_algorithm(algo)
+    if not a.supports(g):
+        raise ValueError(
+            f"routing algorithm {a.name!r} does not support topology kind "
+            f"{g.kind!r} (supports: {', '.join(sorted(a.topologies))}); "
+            f"algorithms available here: {', '.join(available_algorithms(g))}"
+        )
+    cm = get_cost_model(cost_model if cost_model is not None else a.default_cost_model)
+    cacheable = is_registered_algorithm(a) and (
+        not a.cost_sensitive or is_registered_cost_model(cm)
     )
+    if not cacheable:
+        return a.plan(g, src, dests, cost_model=cm)
+    cm_key = cm.name if a.cost_sensitive else ""
+    return _plan_cached(
+        g.kind, g.n, g.rows, a.name, cm_key, src, tuple(sorted(set(dests)))
+    )
+
+
+class _PlannersView(Mapping):
+    """Legacy ``PLANNERS`` mapping, now a live view over the registry.
+
+    Keys are registered algorithm names; values plan through the cached
+    facade with the legacy ``f(g, src, dests)`` signature.
+    """
+
+    def __getitem__(self, name: str):
+        get_algorithm(name)  # unknown names raise, listing what exists
+        return functools.partial(plan, name)
+
+    def __iter__(self):
+        return iter(available_algorithms())
+
+    def __len__(self) -> int:
+        return len(available_algorithms())
+
+
+PLANNERS = _PlannersView()

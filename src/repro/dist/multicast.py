@@ -129,22 +129,29 @@ def _relay_edges(p: MulticastPlan) -> list[tuple[Coord, Coord, int]]:
 
 
 def plan_torus_multicast(
-    t: Torus, src: Coord, dests: list[Coord], algo: str = "DPM"
+    t: Torus, src: Coord, dests: list[Coord], algo="DPM", cost_model=None
 ) -> MulticastPlan:
     """DPM partitioning (Algorithm 1) reused on torus geometry.
 
+    ``algo`` resolves through the routing-algorithm registry (name or
+    ``RoutingAlgorithm`` instance; unknown names raise listing what is
+    registered) and ``cost_model`` optionally overrides the objective.
     Returns the same MulticastPlan structure the NoC simulator consumes;
     paths take shortest wraparound legs and partitions are the torus wedges.
     """
-    return plan(algo, t, src, list(dests))
+    return plan(algo, t, src, list(dests), cost_model=cost_model)
 
 
 def schedule_multicasts(
-    topo: Torus, requests: list[tuple[Coord, list[Coord]]], algo: str = "DPM"
+    topo: Torus,
+    requests: list[tuple[Coord, list[Coord]]],
+    algo="DPM",
+    cost_model=None,
 ) -> Schedule:
     """Schedule a batch of concurrent multicasts as ppermute rounds.
 
-    ``requests`` is a list of ``(src, dests)`` coordinate pairs on ``topo``.
+    ``requests`` is a list of ``(src, dests)`` coordinate pairs on ``topo``;
+    each is planned by any registered routing algorithm under ``cost_model``.
     Payload identity is per-request: a node forwards request r only after an
     earlier round delivered r to it. Rounds are packed greedily in plan
     order, one send and one receive per rank per round.
@@ -152,7 +159,7 @@ def schedule_multicasts(
     have: list[set[int]] = []
     pend: list[tuple[int, int, int, int]] = []  # (req, sender, receiver, hops)
     for rid, (src, dests) in enumerate(requests):
-        p = plan_torus_multicast(topo, src, dests, algo)
+        p = plan_torus_multicast(topo, src, dests, algo, cost_model)
         src_i = topo.idx(src)
         have.append({src_i})
         targeted: set[int] = set()
@@ -194,7 +201,7 @@ def schedule_multicasts(
     return Schedule(topo.num_nodes, rounds, hops, round_reqs)
 
 
-def dp_broadcast_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
+def dp_broadcast_schedule(num_ranks: int, algo="DPM", cost_model=None) -> Schedule:
     """Broadcast rank 0 -> all ranks on a 1-D ring (a data-parallel axis).
 
     The ring is ``Torus(num_ranks, 1)``; with DPM the destination set splits
@@ -203,7 +210,7 @@ def dp_broadcast_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
     """
     ring = torus(num_ranks, 1)
     dests = [(i, 0) for i in range(1, num_ranks)]
-    return schedule_multicasts(ring, [((0, 0), dests)], algo)
+    return schedule_multicasts(ring, [((0, 0), dests)], algo, cost_model)
 
 
 def ring_broadcast_schedule(num_ranks: int) -> Schedule:
@@ -229,7 +236,7 @@ def a2a_req_id(num_ranks: int, src: int, dst: int) -> int:
 
 @functools.lru_cache(maxsize=None)
 def alltoall_schedule(num_ranks: int, algo: str = "DPM") -> Schedule:
-    """All-to-all on a 1-D ring as DPM-planned ppermute rounds.
+    """All-to-all on a 1-D ring as registry-planned ppermute rounds.
 
     Each of the ``n(n-1)`` (src, dst) chunks is its own unicast request (a
     chunk is a *distinct* payload, so relay chains cannot serve it); the

@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 
 from ..core.grid import Coord, MeshGrid
 from ..core.planner import MulticastPlan
+from ..core.planner import plan as _registry_plan
 from ..core.topology import make_topology
 from .config import NoCConfig
 
@@ -121,6 +122,26 @@ class WormholeSim:
         return HIGH if self.g.label(*link[1]) > self.g.label(*link[0]) else LOW
 
     # ----------------------------------------------------------- admission
+    def add_request(
+        self,
+        algo,
+        src: Coord,
+        dests: list[Coord],
+        enqueue_time: int,
+        cost_model=None,
+    ) -> list[int]:
+        """Plan one multicast via the algorithm registry and ingest it.
+
+        ``algo`` is a registered name or ``RoutingAlgorithm`` instance;
+        unknown names raise listing what is registered, and algorithms that
+        do not support this simulator's topology kind are rejected before
+        any packet is admitted.
+        """
+        return self.add_plan(
+            _registry_plan(algo, self.g, src, dests, cost_model=cost_model),
+            enqueue_time,
+        )
+
     def add_plan(self, plan: MulticastPlan, enqueue_time: int) -> list[int]:
         base = len(self.packets)
         pids = []

@@ -16,7 +16,6 @@ from dataclasses import dataclass, field
 
 from ..core.grid import Coord
 from ..core.topology import make_topology
-from ..core.planner import plan
 from .config import NoCConfig
 from .simulator import SimStats, WormholeSim
 
@@ -128,18 +127,21 @@ def simulate(
     algo: str,
     warmup: int | None = None,
     drain_grace: int | None = None,
+    cost_model=None,
 ) -> SimStats:
     """Run one workload under one algorithm; measure post-warmup packets.
 
-    ``warmup``/``drain_grace`` default from ``cfg`` — NoCConfig is the single
-    source of truth for the measurement window shared with ``noc.xsim``.
+    ``algo`` is any registered routing algorithm (``repro.core.algo``);
+    ``cost_model`` optionally overrides the objective cost-sensitive
+    algorithms plan under. ``warmup``/``drain_grace`` default from ``cfg`` —
+    NoCConfig is the single source of truth for the measurement window
+    shared with ``noc.xsim``.
     """
     warmup = cfg.warmup if warmup is None else warmup
     drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
-    g = make_topology(cfg.topology, cfg.n, cfg.m)
     sim = WormholeSim(cfg, measure_window=(warmup, workload.horizon))
     for r in workload.requests:
-        sim.add_plan(plan(algo, g, r.src, r.dests), r.time)
+        sim.add_request(algo, r.src, r.dests, r.time, cost_model=cost_model)
     sim.run(workload.horizon + drain_grace, drain=True)
     return sim.stats
 

@@ -89,15 +89,21 @@ class CompiledTraffic:
 def compile_workload(
     cfg: NoCConfig,
     workload: Workload,
-    algo: str,
+    algo,
     pad_packets: int | None = None,
     pad_stages: int | None = None,
+    cost_model=None,
 ) -> CompiledTraffic:
-    """Plan every request and lower the packet set to dense arrays."""
+    """Plan every request and lower the packet set to dense arrays.
+
+    ``algo`` is resolved through the routing-algorithm registry (name or
+    ``RoutingAlgorithm`` instance); ``cost_model`` optionally overrides the
+    objective cost-sensitive algorithms plan under.
+    """
     g = make_topology(cfg.topology, cfg.n, cfg.m)
     rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid)
     for r in workload.requests:
-        pl_ = plan(algo, g, r.src, r.dests)
+        pl_ = plan(algo, g, r.src, r.dests, cost_model=cost_model)
         _lower_plan(pl_, r.time, rows)
     P = len(rows)
     S = max((len(h) - 1 for h, *_ in rows), default=1)

@@ -27,6 +27,8 @@ import numpy as np
 from ..config import NoCConfig
 from ..simulator import SimStats
 from ..traffic import Workload
+from ...core.algo import available_algorithms, get_algorithm
+from ...core.topology import make_topology
 from ...kernels.noc_step.ops import resolve_backend
 from .compile import CompiledTraffic, compile_workload, stack_traffic
 from .step import CTR, init_state, make_step
@@ -181,8 +183,9 @@ def _slot_bound(cfg: NoCConfig, num_nodes: int, num_links: int) -> int:
 def xsimulate(
     cfg: NoCConfig,
     workloads: list[Workload],
-    algos: tuple[str, ...] = ("MP", "NMP", "DPM"),
+    algos: tuple | None = None,
     *,
+    cost_model=None,
     warmup: int | None = None,
     drain_grace: int | None = None,
     backend: str | None = None,
@@ -190,18 +193,29 @@ def xsimulate(
     pad_packets: int | None = None,
     pad_stages: int | None = None,
 ) -> XSimResults:
-    """Simulate every (workload, algo) pair in one vmapped device dispatch."""
+    """Simulate every (workload, algo) pair in one vmapped device dispatch.
+
+    ``algos`` entries resolve through the routing-algorithm registry (names
+    or ``RoutingAlgorithm`` instances); the default is every registered
+    algorithm that supports the configured topology. ``cost_model``
+    optionally overrides the planning objective for the whole grid.
+    """
+    topo = make_topology(cfg.topology, cfg.n, cfg.m)
+    if algos is None:
+        algos = tuple(available_algorithms(topo))
+    resolved = [get_algorithm(a) for a in algos]
     warmup = cfg.warmup if warmup is None else warmup
     drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
     backend = resolve_backend(backend)
     t0 = time.monotonic()
     traffics: list[CompiledTraffic] = []
     for wl in workloads:
-        for algo in algos:
+        for algo in resolved:
             traffics.append(
                 compile_workload(
                     cfg, wl, algo,
                     pad_packets=pad_packets, pad_stages=pad_stages,
+                    cost_model=cost_model,
                 )
             )
     ref, stacked = stack_traffic(traffics)
@@ -225,7 +239,7 @@ def xsimulate(
     wall = time.monotonic() - t0
     return XSimResults(
         cfg=cfg,
-        algos=tuple(algos),
+        algos=tuple(a.name for a in resolved),
         horizons=np.array([wl.horizon for wl in workloads]),
         warmup=warmup,
         cycles=T,
@@ -241,16 +255,17 @@ def xsimulate(
 def latency_vs_rate_batched(
     cfg: NoCConfig,
     rates: list[float],
-    algos: tuple[str, ...] = ("MP", "NMP", "DPM"),
+    algos: tuple | None = None,
     cycles: int = 1500,
     seed: int = 0,
     **kw,
 ) -> tuple[dict[str, list[tuple[float, float]]], XSimResults]:
     """The fig6 latency-vs-injection-rate sweep as one batched call.
 
-    Returns ``({algo: [(rate, avg_latency), ...]}, results)``. Unlike the
-    host-sim ``latency_vs_rate`` there is no early saturation cut-off: every
-    (rate, algo) point costs the same inside the vmapped scan.
+    Returns ``({algo: [(rate, avg_latency), ...]}, results)``. ``algos``
+    defaults to every registered algorithm supporting the topology. Unlike
+    the host-sim ``latency_vs_rate`` there is no early saturation cut-off:
+    every (rate, algo) point costs the same inside the vmapped scan.
     """
     from ..traffic import synthetic_workload
 
@@ -258,6 +273,6 @@ def latency_vs_rate_batched(
     res = xsimulate(cfg, wls, algos, **kw)
     curves = {
         algo: [(rates[w], res.avg_latency(w, a)) for w in range(len(rates))]
-        for a, algo in enumerate(algos)
+        for a, algo in enumerate(res.algos)
     }
     return curves, res

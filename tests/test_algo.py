@@ -1,0 +1,329 @@
+"""Registry + cost-model tests (repro.core.algo, DESIGN.md §6).
+
+Covers the ISSUE-4 satellites: registry edge cases (duplicate registration,
+topology-kind filtering, unknown-name errors listing what exists), the
+cost-model-keyed plan cache with its info/clear API, DPM-E correctness
+(covering, drains in the wormhole simulator, never beats the restricted
+optimum under its own objective), and the toy-algorithm end-to-end smoke the
+CI registry step runs first.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CostModel,
+    MulticastPlan,
+    PacketPath,
+    available_algorithms,
+    available_cost_models,
+    brute_force_partition,
+    dpm_partition,
+    get_algorithm,
+    get_cost_model,
+    grid,
+    plan,
+    plan_cache_clear,
+    plan_cache_info,
+    register_algorithm,
+    temporary_algorithm,
+    torus,
+    xy_route,
+)
+from repro.core.algo import RoutingAlgorithm, is_registered_cost_model
+
+G8 = grid(8)
+T8 = torus(8)
+
+
+def _toy_mu(g, src, dests):
+    """MU clone used as the registrable toy algorithm in these tests."""
+    p = MulticastPlan("TOY", src, list(dests))
+    for d in dests:
+        p.paths.append(PacketPath(xy_route(g, src, d), [d]))
+    return p
+
+
+# ---------------------------------------------------------------- registry
+def test_builtins_registered_with_expected_metadata():
+    assert available_algorithms()[:5] == ["MU", "DP", "MP", "NMP", "DPM"]
+    assert "DPM-E" in available_algorithms()
+    assert available_algorithms(tag="fig") == ["MU", "MP", "NMP", "DPM"]
+    assert get_algorithm("DPM").cost_sensitive
+    assert not get_algorithm("MU").cost_sensitive
+    assert get_algorithm("DPM-E").default_cost_model == "energy"
+    for name in ("hops", "contention", "energy"):
+        assert name in available_cost_models()
+
+
+def test_duplicate_registration_raises():
+    with temporary_algorithm(_toy_mu, name="TOY-DUP"):
+        with pytest.raises(ValueError, match="already registered"):
+            register_algorithm(_toy_mu, name="TOY-DUP")
+    # context manager unregistered it: registering again is fine now
+    with temporary_algorithm(_toy_mu, name="TOY-DUP"):
+        pass
+
+
+def test_duplicate_cost_model_registration_raises():
+    from repro.core import register_cost_model
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_cost_model(get_cost_model("hops"), name="hops")
+
+
+def test_unknown_algorithm_error_lists_registered():
+    with pytest.raises(KeyError, match="unknown routing algorithm 'NOPE'"):
+        get_algorithm("NOPE")
+    with pytest.raises(KeyError, match="MU, DP, MP, NMP, DPM, DPM-E"):
+        plan("NOPE", G8, (0, 0), [(1, 1)])
+    with pytest.raises(KeyError, match="registered: hops, contention, energy"):
+        get_cost_model("joules")
+
+
+def test_available_algorithms_filters_by_topology_kind():
+    with temporary_algorithm(_toy_mu, name="MESH-ONLY", topologies=("mesh",)):
+        assert "MESH-ONLY" in available_algorithms("mesh")
+        assert "MESH-ONLY" in available_algorithms(G8)
+        assert "MESH-ONLY" not in available_algorithms("torus")
+        assert "MESH-ONLY" not in available_algorithms(T8)
+        # planning on the unsupported kind is rejected with the capability
+        with pytest.raises(ValueError, match="does not support topology kind"):
+            plan("MESH-ONLY", T8, (0, 0), [(1, 1)])
+        assert plan("MESH-ONLY", G8, (0, 0), [(1, 1)]).check_covers()
+    assert "MESH-ONLY" not in available_algorithms()
+
+
+def test_class_based_registration_and_instance_passthrough():
+    class Star(RoutingAlgorithm):
+        name = "STAR-CLS"
+        topologies = frozenset({"mesh"})
+
+        def plan(self, topo, src, dests, *, cost_model):
+            return _toy_mu(topo, src, dests)
+
+    with temporary_algorithm(Star):
+        assert get_algorithm("STAR-CLS").topologies == frozenset({"mesh"})
+        assert plan("STAR-CLS", G8, (2, 2), [(5, 5), (0, 7)]).check_covers()
+    # unregistered instances plan uncached but still work
+    inst = Star()
+    p1 = plan(inst, G8, (2, 2), [(5, 5)])
+    p2 = plan(inst, G8, (2, 2), [(5, 5)])
+    assert p1.check_covers() and p1 is not p2  # no cache entry for strangers
+
+
+# ---------------------------------------------------------------- the cache
+def test_plan_cache_keyed_on_cost_model_and_info_clear():
+    plan_cache_clear()
+    src, dests = (3, 3), [(0, 0), (7, 7), (1, 6), (6, 1), (5, 5)]
+    a = plan("DPM", G8, src, dests)
+    assert plan_cache_info().misses == 1
+    assert plan("DPM", G8, src, dests) is a  # hit
+    assert plan_cache_info().hits == 1
+    # a second cost model MUST NOT alias the first's entry (the old bug)
+    b = plan("DPM", G8, src, dests, cost_model="energy")
+    assert b is not a
+    assert plan_cache_info().misses == 2
+    assert plan("DPM", G8, src, dests, cost_model="energy") is b
+    # explicitly passing the default model lands on the default entry
+    assert plan("DPM", G8, src, dests, cost_model="hops") is a
+    # cost-insensitive algorithms share one entry across models
+    m = plan("MU", G8, src, dests)
+    assert plan("MU", G8, src, dests, cost_model="energy") is m
+    plan_cache_clear()
+    assert plan_cache_info().currsize == 0 and plan_cache_info().hits == 0
+
+
+def test_plan_cache_unregistered_cost_model_bypasses_cache():
+    class Doubled(CostModel):
+        name = "doubled-hops"  # never registered
+
+        def link_cost(self, g, u, v):
+            return 2.0
+
+    src, dests = (1, 1), [(6, 6), (0, 5)]
+    before = plan_cache_info().currsize
+    p1 = plan("DPM", G8, src, dests, cost_model=Doubled())
+    p2 = plan("DPM", G8, src, dests, cost_model=Doubled())
+    assert p1.check_covers() and p1 is not p2
+    assert plan_cache_info().currsize == before  # nothing cached under a name
+    assert not is_registered_cost_model(Doubled())
+
+
+def test_temporary_algorithm_flushes_plan_cache_on_exit():
+    src, dests = (0, 0), [(3, 3)]
+    with temporary_algorithm(_toy_mu, name="EPHEMERAL"):
+        plan("EPHEMERAL", G8, src, dests)
+    # same name, different planner: must not serve the old cached plan
+    def other(g, s, d):
+        p = _toy_mu(g, s, d)
+        p.algorithm = "EPHEMERAL-2"
+        return p
+
+    with temporary_algorithm(other, name="EPHEMERAL"):
+        assert plan("EPHEMERAL", G8, src, dests).algorithm == "EPHEMERAL-2"
+
+
+def test_failed_reregistration_does_not_rename_existing_instance():
+    class Mine(RoutingAlgorithm):
+        name = "MINE-RENAME"
+
+        def plan(self, topo, src, dests, *, cost_model):
+            return _toy_mu(topo, src, dests)
+
+    inst = Mine()
+    with temporary_algorithm(inst):
+        with pytest.raises(ValueError, match="already registered"):
+            register_algorithm(inst, name="DPM")  # clashes with a builtin
+        # the failed call must not have renamed the registered instance
+        assert inst.name == "MINE-RENAME"
+        assert get_algorithm("MINE-RENAME") is inst
+        p1 = plan("MINE-RENAME", G8, (0, 0), [(2, 2)])
+        assert plan("MINE-RENAME", G8, (0, 0), [(2, 2)]) is p1  # still cached
+
+
+def test_cost_model_instance_registered_under_custom_name_stays_cacheable():
+    from repro.core import register_cost_model, unregister_cost_model
+    from repro.core.algo import LinkContentionCost
+
+    cm = LinkContentionCost(lam=2.0)
+    register_cost_model(cm, name="contention2")
+    try:
+        assert cm.name == "contention2"  # synced to the registration key
+        assert is_registered_cost_model(cm)
+        src, dests = (2, 2), [(5, 5), (0, 7), (7, 0)]
+        p1 = plan("DPM", G8, src, dests, cost_model="contention2")
+        assert plan("DPM", G8, src, dests, cost_model="contention2") is p1
+    finally:
+        unregister_cost_model("contention2")
+
+
+# ------------------------------------------------------------- cost models
+def test_hop_cost_model_matches_legacy_routing_costs():
+    from repro.core import dual_path_cost, multi_unicast_cost
+
+    cm = get_cost_model("hops")
+    rng = random.Random(11)
+    nodes = [(x, y) for x in range(8) for y in range(8)]
+    for g in (G8, T8):
+        for _ in range(50):
+            picks = rng.sample(nodes, rng.randint(3, 10))
+            src, dests = picks[0], picks[1:]
+            assert cm.multi_unicast_cost(g, src, dests) == multi_unicast_cost(
+                g, src, dests
+            )
+            assert cm.dual_path_cost(g, src, dests) == dual_path_cost(
+                g, src, dests
+            )
+            assert isinstance(cm.multi_unicast_cost(g, src, dests), int)
+
+
+def test_contention_model_weights_mesh_center_links():
+    cm = get_cost_model("contention")
+    center = cm.link_cost(G8, (3, 0), (4, 0))  # peak bisection cut
+    edge = cm.link_cost(G8, (0, 0), (1, 0))
+    assert center > edge > 1.0
+    assert cm.link_cost(T8, (3, 0), (4, 0)) == 1.0  # torus: edge-transitive
+
+
+def test_energy_model_charges_injection_per_worm():
+    cm = get_cost_model("energy")
+    g = G8
+    assert cm.packet_overhead(g) > 0
+    # two unicasts pay two injections (one per worm) on top of their routes
+    mu = cm.multi_unicast_cost(g, (0, 0), [(1, 0), (2, 0)])
+    routes = cm.unicast_cost(g, (0, 0), (1, 0)) + cm.unicast_cost(g, (0, 0), (2, 0))
+    assert mu == pytest.approx(routes + 2 * cm.packet_overhead(g))
+    # a single 2-dest chain pays the injection exactly once
+    chain = cm.dual_path_cost(g, (0, 0), [(1, 0), (2, 0)])
+    assert chain == pytest.approx(
+        cm.route_cost(g, [(0, 0), (1, 0), (2, 0)]) + cm.packet_overhead(g)
+    )
+
+
+# ------------------------------------------------------------------- DPM-E
+def test_dpm_e_covers_drains_and_respects_restricted_optimum():
+    rng = random.Random(4)
+    nodes = [(x, y) for x in range(8) for y in range(8)]
+    from repro.noc import NoCConfig, WormholeSim
+
+    for g in (G8, T8):
+        sim = WormholeSim(NoCConfig(topology=g.kind))
+        t = 0
+        for _ in range(20):
+            picks = rng.sample(nodes, rng.randint(3, 9))
+            src, dests = picks[0], picks[1:]
+            p = plan("DPM-E", g, src, dests)
+            assert p.check_covers(), (g.kind, src, dests)
+            for path in p.paths:  # hop adjacency under the topology's links
+                for a, b in zip(path.hops, path.hops[1:]):
+                    assert b in g.neighbors(*a)
+            # greedy never beats the exact optimum of its own objective
+            r = dpm_partition(g, src, dests, cost_model="energy")
+            opt, _ = brute_force_partition(g, src, dests, cost_model="energy")
+            assert r.total_cost() >= opt - 1e-9
+            sim.add_request("DPM-E", src, dests, t)
+            t += 40
+        st = sim.run(20_000)
+        # deadlock-class check, operationally: every packet finishes
+        assert st.packets_created == st.packets_finished
+
+
+def test_dpm_e_no_worse_than_dpm_on_energy_in_aggregate():
+    em = get_cost_model("energy")
+    rng = random.Random(2)
+    nodes = [(x, y) for x in range(8) for y in range(8)]
+    tot_dpm = tot_dpme = 0.0
+    for _ in range(120):
+        picks = rng.sample(nodes, rng.randint(8, 17))
+        src, dests = picks[0], picks[1:]
+        tot_dpm += em.plan_cost(G8, plan("DPM", G8, src, dests))
+        tot_dpme += em.plan_cost(G8, plan("DPM-E", G8, src, dests))
+    assert tot_dpme <= tot_dpm
+
+
+# ------------------------------------------------- property-based coverage
+coord8 = st.tuples(st.integers(0, 7), st.integers(0, 7))
+dest_sets = st.lists(coord8, min_size=1, max_size=12, unique=True)
+
+
+@given(coord8, dest_sets)
+@settings(max_examples=40, deadline=None)
+def test_every_registered_algorithm_covers_on_mesh_and_torus(src, dests):
+    dests = [d for d in dests if d != src]
+    if not dests:
+        return
+    for g in (G8, T8):
+        for name in available_algorithms(g):
+            p = plan(name, g, src, dests)
+            assert p.check_covers(), (name, g.kind, src, dests)
+
+
+# ------------------------------------------------------ end-to-end CI smoke
+def test_registry_smoke_toy_algorithm_end_to_end():
+    """The CI registry smoke: register a toy algorithm, push a 4x4 workload
+    through the cached planner, the wormhole simulator, AND an xsim batch —
+    zero edits to any consumer file."""
+    from repro.noc import NoCConfig, WormholeSim, synthetic_workload, xsimulate
+
+    with temporary_algorithm(_toy_mu, name="TOY"):
+        cfg = NoCConfig(n=4, dest_range=(2, 4), warmup=0, drain_grace=400)
+        wl = synthetic_workload(cfg, 0.04, 80, seed=5)
+        # host engine via the registry
+        sim = WormholeSim(cfg, measure_window=(0, wl.horizon))
+        for r in wl.requests:
+            sim.add_request("TOY", r.src, r.dests, r.time)
+        pst = sim.run(wl.horizon + cfg.drain_grace)
+        assert pst.packets_created == pst.packets_finished
+        # batched engine via the registry, toy algo next to a builtin
+        res = xsimulate(cfg, [wl], ("TOY", "DPM"))
+        assert res.algos == ("TOY", "DPM")
+        for a in range(2):
+            assert res.all_drained(0, a)
+        # parity: the toy algorithm's delivery latencies agree across engines
+        assert res.stats(0, 0).avg_latency == pytest.approx(
+            pst.avg_latency, rel=0.10
+        )
+    assert "TOY" not in available_algorithms()
