@@ -19,7 +19,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated module names "
-        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim)",
+        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault)",
     )
     ap.add_argument(
         "--algos",
@@ -38,6 +38,7 @@ def main() -> None:
 
     from . import (
         dist_collectives,
+        fault_resilience,
         fig6_latency,
         fig7_power,
         fig8_traces,
@@ -58,6 +59,7 @@ def main() -> None:
         "kernels": kernels_micro.run,
         "dist": dist_collectives.run,
         "xsim": xsim_sweep.run,
+        "fault": fault_resilience.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,us_per_call,derived")

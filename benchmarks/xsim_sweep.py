@@ -13,6 +13,12 @@ Protocol (all knobs through ``NoCConfig`` — satellite of ISSUE 3):
 * cross-validation gate: on small mesh/torus workloads, per-packet delivery
   sets must be identical and average latency within 10% (the xsim fidelity
   contract, also pinned by tests/test_xsim.py).
+* contention-aware DPM (ROADMAP item): the saturated tail of the same grid
+  re-run with DPM planning under the "contention" cost model — central
+  mesh links priced up, steering merges toward the edge — against plain
+  hop-count DPM, with a gate that the two latency curves actually diverge
+  at saturation (plans must differ AND latency must move; at low load the
+  two are intentionally near-identical).
 
 The committed artifact (results/xsim_sweep.json) records curves from both
 engines, the wall-clock breakdown, measured speedup, parity results, and the
@@ -140,6 +146,52 @@ def run(quick: bool = False, algos=None):
     xsimulate(cfg, wls, algos, slots=slots)
     t_x = time.monotonic() - t0
 
+    # --- contention-aware DPM at saturation (ROADMAP item) --------------
+    # the heaviest rates of the same grid, DPM planned under "contention"
+    # (mesh bisection links cost more) vs the plain hop objective; needs
+    # the plain-DPM curve as baseline, so it only runs when DPM is in the
+    # sweep set (an --algos override may exclude it)
+    contention = None
+    sat_rates = rates[-3:]
+    sat_wls = wls[-3:]
+    if "DPM" in algos:
+        for wl in sat_wls:  # warm the contention plans untimed, like the rest
+            for r in wl.requests:
+                plan("DPM", g, r.src, r.dests, cost_model="contention")
+        res_c = xsimulate(cfg, sat_wls, ("DPM",), cost_model="contention",
+                          slots=slots)
+        dpm_plain = dict(x_curves["DPM"])
+        curve_contention = [
+            (sat_rates[w], round(float(res_c.avg_latency(w, 0)), 2))
+            for w in range(len(sat_rates))
+        ]
+        plans_differ = sum(
+            1
+            for wl in sat_wls
+            for r in wl.requests
+            if [p.hops for p in plan("DPM", g, r.src, r.dests).paths]
+            != [p.hops for p in
+                plan("DPM", g, r.src, r.dests, cost_model="contention").paths]
+        )
+        rel_div = [
+            abs(lat - dpm_plain[rate]) / max(1e-9, dpm_plain[rate])
+            for rate, lat in curve_contention
+        ]
+        contention = {
+            "rates": sat_rates,
+            "dpm_plain": [(r, dpm_plain[r]) for r in sat_rates],
+            "dpm_contention": curve_contention,
+            "plans_differ": plans_differ,
+            "max_rel_divergence": round(max(rel_div), 4),
+            "diverges_at_saturation": bool(
+                plans_differ > 0 and max(rel_div) > 0.01
+            ),
+        }
+        assert contention["diverges_at_saturation"], (
+            "contention-priced DPM is indistinguishable from plain DPM at "
+            f"saturation: {contention}"
+        )
+
     parity = [_parity_case(*case) for case in PARITY_CASES]
     speedup = t_py / max(1e-9, t_x)
     speedup_cold = t_py / max(1e-9, t_x_cold)
@@ -179,6 +231,7 @@ def run(quick: bool = False, algos=None):
         "xsim": {"slots": res.slots, "slots_hwm": res.slots_hwm(),
                  "cycles_simulated": res.cycles},
         "curves": {"python": py_curves, "xsim": x_curves},
+        "contention_dpm": contention,
         "cross_validation": parity,
     }
     CACHE.parent.mkdir(parents=True, exist_ok=True)
@@ -201,4 +254,12 @@ def run(quick: bool = False, algos=None):
     for algo in algos:
         curve = ";".join(f"{r}:{lat}" for r, lat in x_curves[algo])
         rows.append((f"xsim_sweep/curve/{algo}", 0.0, curve))
+    if contention is not None:
+        rows.append((
+            "xsim_sweep/contention_dpm", 0.0,
+            ";".join(f"{r}:{lat}" for r, lat in curve_contention)
+            + f";plans_differ={plans_differ}"
+            + f";max_rel_div={contention['max_rel_divergence']}"
+            + f";diverges={contention['diverges_at_saturation']}",
+        ))
     return rows

@@ -13,6 +13,9 @@ Public API:
 Every planner and routing function takes any Topology (mesh or torus).
 Algorithms and cost models resolve through the ``repro.core.algo`` registry;
 ``plan_dpm_e`` (registered as "DPM-E") is DPM optimizing the energy model.
+Routes come from the route-provider layer (``repro.core.routefn``,
+DESIGN.md §7): ``faulty(topo, broken_links)`` degrades any topology and
+every planner/simulator detours around the broken links automatically.
 """
 from .algo import (
     CostModel,
@@ -54,6 +57,17 @@ from .planner import (
     plan_mp,
     plan_mu,
     plan_nmp,
+    segment_plan_for_faults,
+)
+from .routefn import (
+    DisconnectedError,
+    FaultAwareProvider,
+    FaultyTopology,
+    MinimalRouteProvider,
+    RouteProvider,
+    faulty,
+    provider_for,
+    route_cost_matrices,
 )
 from .routing import (
     dual_path_cost,
@@ -70,14 +84,19 @@ __all__ = [
     "Coord",
     "CostModel",
     "DPMResult",
+    "DisconnectedError",
     "EnergyCost",
+    "FaultAwareProvider",
+    "FaultyTopology",
     "HopCountCost",
     "LinkContentionCost",
     "MeshGrid",
+    "MinimalRouteProvider",
     "MulticastPlan",
     "PLANNERS",
     "PacketPath",
     "PartitionCost",
+    "RouteProvider",
     "RoutingAlgorithm",
     "Topology",
     "Torus",
@@ -88,6 +107,7 @@ __all__ = [
     "candidate_cost",
     "dpm_partition",
     "dual_path_cost",
+    "faulty",
     "get_algorithm",
     "get_cost_model",
     "greedy_tour",
@@ -105,10 +125,13 @@ __all__ = [
     "plan_mp",
     "plan_mu",
     "plan_nmp",
+    "provider_for",
     "register_algorithm",
     "register_cost_model",
     "representative",
     "ring_delta",
+    "route_cost_matrices",
+    "segment_plan_for_faults",
     "temporary_algorithm",
     "torus",
     "unregister_algorithm",

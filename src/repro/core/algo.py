@@ -27,7 +27,8 @@ from contextlib import contextmanager
 from typing import TYPE_CHECKING, Callable, Iterable
 
 from .grid import Coord, MeshGrid
-from .routing import path_multicast, xy_route
+from .routefn import provider_for
+from .routing import path_multicast
 
 if TYPE_CHECKING:  # planner imports this module; annotation-only reverse dep
     from .planner import MulticastPlan
@@ -68,7 +69,9 @@ class CostModel:
         return sum(self.link_cost(g, u, v) for u, v in zip(hops, hops[1:]))
 
     def unicast_cost(self, g: MeshGrid, a: Coord, b: Coord) -> float:
-        return self.route_cost(g, xy_route(g, a, b))
+        """Price of the provider's unicast route a -> b (dimension-ordered
+        on a healthy topology; detoured on a degraded one)."""
+        return self.route_cost(g, provider_for(g).unicast(g, a, b))
 
     def multi_unicast_cost(self, g: MeshGrid, src: Coord, dests: list[Coord]) -> float:
         """Definition 2's C_t under this model: one worm per destination."""
@@ -110,6 +113,9 @@ class HopCountCost(CostModel):
         return len(hops) - 1
 
     def unicast_cost(self, g: MeshGrid, a: Coord, b: Coord) -> int:
+        # == len(provider unicast) - 1 on every topology: the provider's
+        # route is shortest on the (possibly degraded) graph, and
+        # FaultyTopology.distance is exactly that BFS shortest-path length.
         return g.distance(a, b)
 
     def packet_overhead(self, g: MeshGrid) -> int:

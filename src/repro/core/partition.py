@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 
 from .algo import CostModel, get_cost_model
 from .grid import Coord, MeshGrid
-from .routing import xy_route
+from .routefn import provider_for
 
 # Candidate index sets: 8 singles, 8 consecutive pairs, 8 consecutive triples.
 SINGLE_IDS: list[tuple[int, ...]] = [(i,) for i in range(8)]
@@ -89,7 +89,9 @@ class PartitionCost:
 
 
 def representative(g: MeshGrid, src: Coord, dests: list[Coord]) -> Coord:
-    """Definition 1: nearest destination to the source (topology distance).
+    """Definition 1: nearest destination to the source (topology distance —
+    on a degraded topology the BFS shortest-path distance, so the
+    representative choice adapts to faults).
 
     Ties broken by smallest boustrophedon label for determinism.
     """
@@ -110,6 +112,12 @@ def candidate_cost(
     ``CostModel`` (name or instance) re-prices both plus the S->R leg. When
     the two tie, MU is preferred (the paper: "the overhead of computing D_H,
     D_L is eliminated using MU").
+
+    All three terms are priced on hop sequences from the topology's route
+    provider (``routefn.provider_for``): on a degraded topology the S->R leg
+    and every C_t/C_p route detour around broken links, so Algorithm 1's
+    merge decisions see the fault set — the dynamic, global-view behaviour
+    the paper claims over static partitioning.
     """
     cm = get_cost_model(cost_model)
     if not dests:
@@ -118,7 +126,7 @@ def candidate_cost(
     rest = [d for d in dests if d != rep]
     cost_mu = cm.multi_unicast_cost(g, rep, rest)
     cost_dp = cm.dual_path_cost(g, rep, rest)
-    source_leg = cm.route_cost(g, xy_route(g, src, rep))
+    source_leg = cm.route_cost(g, provider_for(g).unicast(g, src, rep))
     mode = "MU" if cost_mu <= cost_dp else "DP"
     return PartitionCost(ids, list(dests), rep, cost_mu, cost_dp, source_leg, mode)
 

@@ -214,6 +214,108 @@ def plan_dpm_e(
 
 
 # ---------------------------------------------------------------------------
+# Deadlock-free segmentation on degraded topologies (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def _monotone_runs(g: MeshGrid, hops: list[Coord]) -> list[tuple[int, int]]:
+    """Split a hop sequence into maximal label-monotone runs.
+
+    Returns inclusive (start, end) index ranges; consecutive runs share the
+    boundary node. A worm confined to one run crosses links of exactly one
+    VC class (HIGH iff labels increase), which is the property the
+    degraded-topology deadlock-freedom argument needs.
+    """
+    labs = [g.label(*h) for h in hops]
+    runs: list[tuple[int, int]] = []
+    start, direction = 0, 0
+    for i in range(1, len(hops)):
+        d = 1 if labs[i] > labs[i - 1] else -1
+        if direction == 0:
+            direction = d
+        elif d != direction:
+            runs.append((start, i - 1))
+            start, direction = i - 1, d
+    runs.append((start, len(hops) - 1))
+    return runs
+
+
+def segment_plan_for_faults(p: MulticastPlan, g: MeshGrid) -> MulticastPlan:
+    """Decompose every packet into label-monotone worm segments.
+
+    On a degraded topology detoured routes (and even clean dimension-ordered
+    ones) mix label-increasing and label-decreasing hops, so a single worm
+    can hold virtual channels in both subnetworks at once — which is exactly
+    the cross-class hold-and-wait that wormhole deadlock needs (observed in
+    simulation at high fault density). This pass splits each path at every
+    label-direction reversal; the tail segments become child packets relayed
+    cut-through at the boundary node's NI (the same VCTM-style parent/child
+    fork both simulators already implement for DPM's MU re-injection). Every
+    resulting worm is label-monotone, so each lives in exactly one VC class
+    and the per-class channel dependency graphs are ordered by the
+    Hamiltonian label — acyclic, hence deadlock-free at any fault density
+    (DESIGN.md §7 has the full argument).
+
+    Deliveries stay where the original path delivered them (a relay boundary
+    is an NI absorption, not a multicast delivery); transit segments may
+    carry none. Idempotent, and the identity on already-monotone plans.
+    """
+    segs = [_monotone_runs(g, path.hops) for path in p.paths]
+    if all(len(s) <= 1 for s in segs):
+        return p
+    new_idx: list[list[int]] = []  # original path -> its new segment indices
+    base = 0
+    for s in segs:
+        new_idx.append(list(range(base, base + len(s))))
+        base += len(s)
+
+    def _seg_at(op: int, pos: int) -> int:
+        """New index of original path ``op``'s segment entering hop ``pos``."""
+        for (s, e), ni in zip(segs[op], new_idx[op]):
+            if s < pos <= e:
+                return ni
+        raise ValueError(f"position {pos} outside path {op}")
+
+    out = MulticastPlan(p.algorithm, p.src, list(p.dests))
+    for op, path in enumerate(p.paths):
+        if len(path.hops) == 1:
+            # degenerate source-only path (destination == source, e.g. MU):
+            # carries no flits, nothing to segment — pass through verbatim
+            parent = (
+                None
+                if path.parent is None
+                else _seg_at(
+                    path.parent,
+                    p.paths[path.parent].hops.index(path.hops[0], 1),
+                )
+            )
+            out.paths.append(
+                PacketPath(list(path.hops), list(path.deliveries), parent=parent)
+            )
+            continue
+        deliver_pos = {path.hops.index(d, 1): d for d in path.deliveries}
+        for j, (s, e) in enumerate(segs[op]):
+            if j == 0:
+                parent = (
+                    None
+                    if path.parent is None
+                    else _seg_at(
+                        path.parent,
+                        p.paths[path.parent].hops.index(path.hops[0], 1),
+                    )
+                )
+            else:
+                parent = new_idx[op][j - 1]
+            out.paths.append(
+                PacketPath(
+                    path.hops[s : e + 1],
+                    [d for pos, d in sorted(deliver_pos.items())
+                     if s < pos <= e],
+                    parent=parent,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Registry-backed cached facade
 # ---------------------------------------------------------------------------
 register_algorithm(plan_mu, name="MU", tags=("fig",))
@@ -231,16 +333,19 @@ def _plan_cached(
     kind: str,
     n: int,
     m: int,
+    faults: tuple,
     algo: str,
     cost_model: str,
     src: Coord,
     dests: tuple[Coord, ...],
 ):
     a = get_algorithm(algo)
-    return a.plan(
-        make_topology(kind, n, m), src, list(dests),
+    topo = make_topology(kind, n, m, faults)
+    p = a.plan(
+        topo, src, list(dests),
         cost_model=get_cost_model(cost_model or a.default_cost_model),
     )
+    return segment_plan_for_faults(p, topo) if faults else p
 
 
 on_registry_change(lambda: _plan_cached.cache_clear())
@@ -267,12 +372,16 @@ def plan(
     ``algo`` is a registered algorithm name (or a ``RoutingAlgorithm``
     instance); ``cost_model`` a registered model name or instance, defaulting
     to the algorithm's own objective. The cache key is normalized —
-    (topology kind, n, rows, algorithm, cost-model, src, sorted unique
-    dests) — so grid(8) and grid(8, 8) share one entry, mesh/torus plans of
-    the same dimensions never collide, and two cost models never alias one
-    entry. Cost-insensitive algorithms share one entry across models.
-    Unregistered algorithm/cost-model instances plan uncached (the name key
-    could not be trusted to resolve back to them).
+    (topology kind, n, rows, fault set, algorithm, cost-model, src, sorted
+    unique dests) — so grid(8) and grid(8, 8) share one entry, mesh/torus
+    plans of the same dimensions never collide, two cost models never alias
+    one entry, and plans for different broken-link sets (``FaultyTopology``)
+    never alias each other or the healthy plan. Cost-insensitive algorithms
+    share one entry across models. Unregistered algorithm/cost-model
+    instances plan uncached (the name key could not be trusted to resolve
+    back to them). On a degraded topology every returned plan is segmented
+    into label-monotone worms (``segment_plan_for_faults``) — the
+    deadlock-freedom guarantee of DESIGN.md §7.
     """
     a = get_algorithm(algo)
     if not a.supports(g):
@@ -285,11 +394,14 @@ def plan(
     cacheable = is_registered_algorithm(a) and (
         not a.cost_sensitive or is_registered_cost_model(cm)
     )
+    faults = getattr(g, "faults", ())
     if not cacheable:
-        return a.plan(g, src, dests, cost_model=cm)
+        p = a.plan(g, src, dests, cost_model=cm)
+        return segment_plan_for_faults(p, g) if faults else p
     cm_key = cm.name if a.cost_sensitive else ""
     return _plan_cached(
-        g.kind, g.n, g.rows, a.name, cm_key, src, tuple(sorted(set(dests)))
+        g.kind, g.n, g.rows, faults, a.name, cm_key, src,
+        tuple(sorted(set(dests))),
     )
 
 

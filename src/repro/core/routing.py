@@ -20,49 +20,38 @@ Three routing functions are used by the algorithms in this repo:
 All functions return explicit hop sequences (lists of (x, y) coords starting
 at the source), which the cycle-level simulator consumes directly and whose
 lengths are the hop-count costs used by the planners. ``g`` is any
-``Topology`` (MeshGrid or Torus).
+``Topology`` (MeshGrid or Torus, possibly degraded by ``FaultyTopology``).
+
+Since the route-provider layer (DESIGN.md §7) every function here routes
+through ``provider_for(g)``: fault-free topologies resolve to
+``MinimalRouteProvider`` (the implementations above, bit-identical to the
+pre-provider behaviour) and degraded topologies to ``FaultAwareProvider``,
+which detours around broken links — so every caller of these functions
+(planners, cost models, simulators, dist schedulers) is fault-aware without
+further changes.
 """
 from __future__ import annotations
 
 from .grid import Coord, MeshGrid
+from .routefn import provider_for
 
 
 def xy_route(g: MeshGrid, src: Coord, dst: Coord) -> list[Coord]:
-    """Dimension-ordered minimal route, inclusive of both endpoints."""
-    dx, dy = g.delta(src, dst)
-    x, y = src
-    path = [src]
-    step = 1 if dx > 0 else -1
-    for _ in range(abs(dx)):
-        x, y = g.normalize(x + step, y)
-        path.append((x, y))
-    step = 1 if dy > 0 else -1
-    for _ in range(abs(dy)):
-        x, y = g.normalize(x, y + step)
-        path.append((x, y))
-    return path
+    """Dimension-ordered minimal route, inclusive of both endpoints.
+
+    On a degraded topology the provider detours (BFS shortest path) when the
+    dimension-ordered route crosses a broken link; the length then equals the
+    degraded ``Topology.distance``.
+    """
+    return provider_for(g).unicast(g, src, dst)
 
 
 def label_route_step(g: MeshGrid, cur: Coord, target: Coord, high: bool) -> Coord:
-    """One hop of the dual-path routing function.
-
-    high=True: next = argmax over neighbors of label(v) s.t. label(v) <= label(target)
-    high=False: next = argmin over neighbors of label(v) s.t. label(v) >= label(target)
-    """
-    lt = g.label(*target)
-    best = None
-    best_lab = None
-    for v in g.neighbors(*cur):
-        lv = g.label(*v)
-        if high:
-            if lv <= lt and (best_lab is None or lv > best_lab):
-                best, best_lab = v, lv
-        else:
-            if lv >= lt and (best_lab is None or lv < best_lab):
-                best, best_lab = v, lv
-    if best is None:  # cannot happen on a connected mesh with valid direction
-        raise RuntimeError(f"label_route stuck at {cur} -> {target} (high={high})")
-    return best
+    """One hop of the dual-path routing function (see
+    ``routefn.MinimalRouteProvider.label_step`` for the rule; the
+    fault-aware provider restricts it to live links and falls back to a BFS
+    hop when the rule has no live candidate)."""
+    return provider_for(g).label_step(g, cur, target, high)
 
 
 def label_route(g: MeshGrid, src: Coord, dst: Coord, high: bool) -> list[Coord]:
@@ -88,16 +77,17 @@ def path_multicast(
     > label(src)); ``high=False`` descending. A destination passed through en
     route is considered delivered at that point (wormhole pass-through
     delivery), so the walk always heads for the nearest-in-label-order
-    unvisited destination.
+    unvisited destination. A destination equal to ``src`` is delivered at
+    injection (zero hops) — the same rule ``greedy_tour`` applies.
     Returns the full hop sequence (deliveries are simply path points that are
     destinations).
     """
-    if not dests:
+    pending = [d for d in dests if d != src]
+    if not pending:
         return [src]
-    remaining = sorted(dests, key=lambda d: g.label(*d), reverse=not high)
+    pending.sort(key=lambda d: g.label(*d), reverse=not high)
     path = [src]
     cur = src
-    pending = list(remaining)
     while pending:
         target = pending[0]
         cur = label_route_step(g, cur, target, high)
@@ -107,19 +97,28 @@ def path_multicast(
 
 
 def greedy_tour(g: MeshGrid, src: Coord, dests: list[Coord]) -> list[Coord]:
-    """NMP-style tour: repeatedly go (XY) to the nearest remaining destination."""
+    """NMP-style tour: repeatedly go (XY) to the nearest remaining destination.
+
+    Delivery dedup matches ``path_multicast``: a destination equal to ``src``
+    is delivered at injection, and a destination is considered delivered at
+    the first hop that *enters* it (leg points after the leg's start) —
+    whether it was the leg's explicit target or a pass-through. The previous
+    rule filtered explicit targets and pass-throughs separately with a set
+    built from the whole leg (including its start), which double-counted the
+    leg origin and handled src-equal destinations inconsistently.
+    """
     path = [src]
     cur = src
-    pending = list(dests)
+    pending = [d for d in dests if d != src]
     while pending:
         nxt = min(pending, key=lambda d: (g.distance(cur, d), g.row_major(*d)))
         leg = xy_route(g, cur, nxt)
         path.extend(leg[1:])
         cur = nxt
-        pending = [d for d in pending if d != cur]
-        # pass-through deliveries on the leg
-        leg_set = set(leg)
-        pending = [d for d in pending if d not in leg_set]
+        # one rule for target and pass-through deliveries alike: every node
+        # the leg entered (leg[1:] — the worm's arrivals) is delivered
+        entered = set(leg[1:])
+        pending = [d for d in pending if d not in entered]
     return path
 
 
@@ -143,5 +142,6 @@ def dual_path_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
 
 def multi_unicast_cost(g: MeshGrid, src: Coord, dests: list[Coord]) -> int:
     """Definition 2's C_t: sum of minimal distances src -> each destination
-    (Manhattan on the mesh, toroidal Manhattan on the torus)."""
+    (Manhattan on the mesh, toroidal Manhattan on the torus, BFS shortest
+    path on a degraded topology — always the provider route length)."""
     return sum(g.distance(src, d) for d in dests)

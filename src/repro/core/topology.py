@@ -123,6 +123,18 @@ def torus(n: int, m: int | None = None) -> Torus:
 _FACTORIES = {"mesh": grid, "torus": torus}
 
 
-def make_topology(kind: str, n: int, m: int | None = None) -> MeshGrid:
-    """Construct a topology from its cache key (kind, n, m)."""
-    return _FACTORIES[kind](n, m)
+def make_topology(
+    kind: str, n: int, m: int | None = None, faults: tuple = ()
+) -> MeshGrid:
+    """Construct a topology from its cache key (kind, n, m, faults).
+
+    ``faults`` is an iterable of broken (u, v) links; when non-empty the
+    base topology is wrapped in a ``FaultyTopology`` (interned, like the
+    bases), which is what keys the planner cache for degraded plans.
+    """
+    base = _FACTORIES[kind](n, m)
+    if not faults:
+        return base
+    from .routefn import faulty  # routefn imports grid only; no cycle
+
+    return faulty(base, tuple(faults))

@@ -32,6 +32,7 @@ import numpy as np
 
 from ..core.grid import Coord
 from ..core.planner import MulticastPlan, plan
+from ..core.routefn import faulty
 from ..core.topology import Torus, make_topology, torus
 
 # Alpha-beta-hop calibration constants for Schedule.cost: per-round software/
@@ -112,33 +113,72 @@ def _relay_edges(p: MulticastPlan) -> list[tuple[Coord, Coord, int]]:
     A path-based multicast delivers in path order, so each delivery can be
     served by the previous delivery point (or the injection node) relaying
     the payload — the store-and-forward rendering of one wormhole worm.
-    Child paths (DPM MU-mode re-injection) start at the representative,
-    which the parent path has already delivered to.
+    Child paths start where their parent's header released them: at a
+    *delivery* for DPM MU-mode re-injections, or at a transit boundary for
+    the degraded-topology monotone segments (core.planner
+    ``segment_plan_for_faults``). A transit boundary does not logically
+    hold the payload at the collectives level, so each path's first edge
+    is anchored at the nearest *delivered* point (or the root injection
+    node) walking back through the ancestor chain, with hop counts
+    accumulated along the way — segmentation leaves the edge set of the
+    unsegmented plan unchanged.
     """
     edges: list[tuple[Coord, Coord, int]] = []
-    for path in p.paths:
-        holder, hpos = path.hops[0], 0
+
+    def _entry(i: int) -> tuple[Coord, int]:
+        """(nearest holder at/before path i's injection, hops back to it)."""
+        node, back = p.paths[i].hops[0], 0
+        j = p.paths[i].parent
+        while j is not None:
+            par = p.paths[j]
+            pos = par.hops.index(node, 1)
+            best = None  # latest delivery of par at/before pos
+            for d in par.deliveries:
+                dpos = par.hops.index(d, 1)
+                if dpos <= pos and (best is None or dpos > best[1]):
+                    best = (d, dpos)
+            if best is not None:
+                return best[0], back + (pos - best[1])
+            back += pos
+            node, j = par.hops[0], par.parent
+        return node, back
+
+    for i, path in enumerate(p.paths):
+        if not path.deliveries:
+            continue  # pure transit segment: no absorption to serve
+        holder, back = _entry(i)
+        hpos = 0
         for d in path.deliveries:
             pos = next(
-                i for i in range(hpos, len(path.hops)) if path.hops[i] == d
+                k for k in range(hpos, len(path.hops)) if path.hops[k] == d
             )
             if d != holder:
-                edges.append((holder, d, pos - hpos))
-            holder, hpos = d, pos
+                edges.append((holder, d, pos - hpos + back))
+            holder, hpos, back = d, pos, 0
     return edges
 
 
 def plan_torus_multicast(
-    t: Torus, src: Coord, dests: list[Coord], algo="DPM", cost_model=None
+    t: Torus,
+    src: Coord,
+    dests: list[Coord],
+    algo="DPM",
+    cost_model=None,
+    broken_links: tuple = (),
 ) -> MulticastPlan:
     """DPM partitioning (Algorithm 1) reused on torus geometry.
 
     ``algo`` resolves through the routing-algorithm registry (name or
     ``RoutingAlgorithm`` instance; unknown names raise listing what is
     registered) and ``cost_model`` optionally overrides the objective.
+    ``broken_links`` degrades the topology (``core.routefn.faulty``): plans
+    then detour around the broken ICI links — the failed-link collective
+    case — and an unreachable rank raises ``DisconnectedError``.
     Returns the same MulticastPlan structure the NoC simulator consumes;
     paths take shortest wraparound legs and partitions are the torus wedges.
     """
+    if broken_links:
+        t = faulty(t, tuple(broken_links))
     return plan(algo, t, src, list(dests), cost_model=cost_model)
 
 
@@ -147,15 +187,23 @@ def schedule_multicasts(
     requests: list[tuple[Coord, list[Coord]]],
     algo="DPM",
     cost_model=None,
+    broken_links: tuple = (),
 ) -> Schedule:
     """Schedule a batch of concurrent multicasts as ppermute rounds.
 
     ``requests`` is a list of ``(src, dests)`` coordinate pairs on ``topo``;
     each is planned by any registered routing algorithm under ``cost_model``.
+    ``broken_links`` (or passing an already-degraded ``FaultyTopology``)
+    schedules on the degraded fabric: relay edges follow the detoured
+    provider routes, so their hop counts — and ``Schedule.cost`` — price the
+    fault set, while the round structure stays a valid set of ppermutes
+    (rank-to-rank sends are link-agnostic at the collectives level).
     Payload identity is per-request: a node forwards request r only after an
     earlier round delivered r to it. Rounds are packed greedily in plan
     order, one send and one receive per rank per round.
     """
+    if broken_links:
+        topo = faulty(topo, tuple(broken_links))
     have: list[set[int]] = []
     pend: list[tuple[int, int, int, int]] = []  # (req, sender, receiver, hops)
     for rid, (src, dests) in enumerate(requests):

@@ -102,6 +102,70 @@ def _kernel(
         rep_ref[:, ci] = jnp.where(any_sel, rep, -1)
 
 
+def _weighted_kernel(
+    mask_ref, sxy_ref, dist_ref, weight_ref, cost_ref, rep_ref,
+    *, n: int, m: int, leg: bool, wrap: bool, overhead: float,
+):
+    """Weighted variant: distances and per-destination prices come from
+    dense (NN, NN) route tensors instead of coordinate arithmetic.
+
+    ``dist[u, v]`` is the provider-route hop count (detours included on a
+    degraded topology) and drives Definition 1 representative selection;
+    ``weight[u, v]`` is the route price under an arbitrary cost model and
+    drives Definition 2's C_t plus the S->R leg; ``overhead`` is the
+    model's per-worm injection price (charged per re-injected MU child,
+    i.e. per destination beyond the representative). Partition membership
+    stays geometric (base-topology wedges). Row gathers are one-hot MXU
+    matmuls — float32 sums of 0/1-selected rows, exact for integer-valued
+    weights below 2^24.
+    """
+    NN = n * m
+    node = jax.lax.iota(jnp.int32, NN)
+    xs = node % n
+    ys = node // n
+    blabel = jnp.where(ys % 2 == 0, ys * n + xs, ys * n + (n - 1 - xs))
+
+    dm = mask_ref[...]  # (TP, NN) int32 0/1
+    sx = sxy_ref[:, 0:1]
+    sy = sxy_ref[:, 1:2]
+    dist = dist_ref[...]  # (NN, NN) f32
+    weight = weight_ref[...]  # (NN, NN) f32
+
+    dxs = _ring_delta(xs[None, :] - sx, n, wrap)
+    dys = _ring_delta(ys[None, :] - sy, m, wrap)
+    gx, lx, ex = dxs > 0, dxs < 0, dxs == 0
+    gy, ly, ey = dys > 0, dys < 0, dys == 0
+    parts = [
+        gx & gy, ex & gy, lx & gy, lx & ey,
+        lx & ly, ex & ly, gx & ly, gx & ey,
+    ]
+
+    src_idx = sy[:, 0] * n + sx[:, 0]  # (TP,) row-major
+    oh_src = (node[None, :] == src_idx[:, None]).astype(jnp.float32)
+    dsrc = jnp.dot(
+        oh_src, dist, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)  # (TP, NN) provider hop counts src -> node
+    w_src = jnp.dot(oh_src, weight, preferred_element_type=jnp.float32)
+
+    for ci, ids in enumerate(CANDS):
+        cm = parts[ids[0]]
+        for i in ids[1:]:
+            cm = cm | parts[i]
+        sel = (dm > 0) & cm
+        any_sel = sel.any(axis=1)
+        key = jnp.where(sel, dsrc * BIG + blabel[None, :], jnp.int32(2**30))
+        rep = jnp.argmin(key, axis=1).astype(jnp.int32)
+        oh_rep = (node[None, :] == rep[:, None]).astype(jnp.float32)
+        w_rep = jnp.dot(oh_rep, weight, preferred_element_type=jnp.float32)
+        cnt = jnp.sum(sel.astype(jnp.float32), axis=1)
+        ct = jnp.sum(jnp.where(sel, w_rep, 0.0), axis=1)
+        ct = ct + jnp.maximum(cnt - 1.0, 0.0) * overhead
+        if leg:
+            ct = ct + jnp.sum(oh_rep * w_src, axis=1)
+        cost_ref[:, ci] = jnp.where(any_sel, ct, 0.0)
+        rep_ref[:, ci] = jnp.where(any_sel, rep, -1)
+
+
 def dpm_cost_table(
     dest_mask: jax.Array,  # (P, NN) int32 0/1 (row-major nodes)
     src_xy: jax.Array,  # (P, 2) int32
@@ -143,4 +207,70 @@ def dpm_cost_table(
         ],
         interpret=interpret,
     )(dest_mask.astype(jnp.int32), src_xy.astype(jnp.int32))
+    return costs[:P], reps[:P]
+
+
+def dpm_cost_table_weighted(
+    dest_mask: jax.Array,  # (P, NN) int32 0/1 (row-major nodes)
+    src_xy: jax.Array,  # (P, 2) int32
+    dist: jax.Array,  # (NN, NN) provider-route hop counts (int-valued)
+    weight: jax.Array,  # (NN, NN) provider-route prices under a cost model
+    *,
+    n: int,
+    m: int | None = None,
+    wrap: bool = False,
+    overhead: float = 0.0,
+    include_source_leg: bool = True,
+    tile: int = 128,
+    interpret: bool = False,
+):
+    """Batched candidate cost tables over arbitrary route tensors.
+
+    The generalization of ``dpm_cost_table`` the route-provider layer
+    feeds: ``(dist, weight, overhead)`` come from
+    ``repro.core.routefn.route_cost_matrices(topo, cost_model)``, so
+    energy-, contention-, and fault-priced DPM (detoured hop counts on a
+    ``FaultyTopology``) all batch on device through one kernel. Returns
+    ``(costs (P, 24) float32, reps (P, 24) int32)``; candidate cost is C_t
+    from the representative plus, when ``include_source_leg``, the priced
+    S->R leg — matching ``repro.core.partition.candidate_cost``'s ``cost_mu
+    + source_leg`` under the same model (exactly for integer-valued
+    weights, to float32 rounding otherwise).
+    """
+    m = m or n
+    P, NN = dest_mask.shape
+    assert NN == n * m and dist.shape == weight.shape == (NN, NN)
+    pad = (-P) % tile
+    if pad:
+        dest_mask = jnp.pad(dest_mask, [(0, pad), (0, 0)])
+        src_xy = jnp.pad(src_xy, [(0, pad), (0, 0)])
+    Pp = P + pad
+    kernel = functools.partial(
+        _weighted_kernel,
+        n=n, m=m, leg=include_source_leg, wrap=wrap, overhead=float(overhead),
+    )
+    costs, reps = pl.pallas_call(
+        kernel,
+        grid=(Pp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, NN), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((NN, NN), lambda i: (0, 0)),
+            pl.BlockSpec((NN, NN), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 24), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 24), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Pp, 24), jnp.float32),
+            jax.ShapeDtypeStruct((Pp, 24), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        dest_mask.astype(jnp.int32),
+        src_xy.astype(jnp.int32),
+        dist.astype(jnp.float32),
+        weight.astype(jnp.float32),
+    )
     return costs[:P], reps[:P]

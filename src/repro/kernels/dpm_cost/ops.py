@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .dpm_cost import CANDS, dpm_cost_table
+from .dpm_cost import CANDS, dpm_cost_table, dpm_cost_table_weighted
 
 _SINGLES = jnp.arange(8)
 # candidate -> bitmask over the 8 basic partitions
@@ -53,11 +53,26 @@ def dpm_plan(
         include_source_leg=include_source_leg,
         interpret=interpret,
     )
+    # greedy merge (Definition 3 savings + tie-breaks) shared with the
+    # weighted path — int32 costs keep the original integer arithmetic
+    return _greedy_merge(costs, reps), costs, reps
+
+
+def total_plan_cost(chosen, costs):
+    return jnp.sum(jnp.where(chosen, costs, 0), axis=1)
+
+
+def _greedy_merge(costs, reps):
+    """Algorithm 1's greedy merge over an already-computed candidate table.
+
+    Shared by the hop-count and weighted paths; ``costs`` may be int32 (hop
+    counting) or float32 (weighted objectives) — savings stay in the input
+    dtype and the host tie-break is reproduced exactly in either.
+    """
     P = costs.shape[0]
     nonempty = reps >= 0  # (P, 24)
 
-    # saving of each merged candidate vs its singles (Definition 3)
-    split_cost = jnp.zeros((P, 24), jnp.int32)
+    split_cost = jnp.zeros_like(costs)
     for ci, ids in enumerate(CANDS):
         if len(ids) == 1:
             continue
@@ -69,19 +84,26 @@ def dpm_plan(
         0,
     )
 
-    # tie-break: fewer partitions first, then smaller index -> encode
-    # priority = saving * 64 - (len(ids) * 8 + ci_mod) so larger is better
-    sizes = jnp.array([len(ids) for ids in CANDS], jnp.int32)
-    prio_adj = sizes * 32 + jnp.arange(24, dtype=jnp.int32)
+    # host tie-break (dpm_partition): max saving, then fewer merged
+    # partitions, then smaller candidate index — resolved as a two-step
+    # argmax/argmin so exact-tie semantics survive float32 savings (a
+    # scalar "saving * K - adj" encoding would mis-rank near-ties under
+    # the energy/contention objectives)
+    prio_adj = (
+        jnp.array([len(ids) for ids in CANDS], jnp.int32) * 32
+        + jnp.arange(24, dtype=jnp.int32)
+    )
 
     def step(state, _):
-        saving, covered, chosen = state  # covered: (P,) int32 bitmask
-        # zero savings of candidates overlapping covered partitions
+        saving, covered, chosen = state
         overlap = (_CAND_BITS[None, :] & covered[:, None]) != 0
         s = jnp.where(overlap, 0, saving)
-        prio = s * 1024 - prio_adj[None, :]
-        best = jnp.argmax(jnp.where(s > 0, prio, -(2**30)), axis=1)
-        has = jnp.take_along_axis(s, best[:, None], 1)[:, 0] > 0
+        smax = jnp.max(s, axis=1, keepdims=True)
+        is_best = (s == smax) & (s > 0)
+        best = jnp.argmin(
+            jnp.where(is_best, prio_adj[None, :], jnp.int32(2**30)), axis=1
+        )
+        has = smax[:, 0] > 0
         bbits = _CAND_BITS[best]
         covered = jnp.where(has, covered | bbits, covered)
         chosen = chosen.at[jnp.arange(P), best].set(
@@ -94,12 +116,44 @@ def dpm_plan(
     (saving, covered, chosen), _ = jax.lax.scan(
         step, (saving0, covered0, chosen0), None, length=4
     )
-    # leftover non-empty singles not covered by a chosen merge
     single_bit = 1 << jnp.arange(8, dtype=jnp.int32)
     leftover = nonempty[:, :8] & ((covered[:, None] & single_bit[None, :]) == 0)
     chosen = chosen.at[:, :8].set(chosen[:, :8] | leftover)
-    return chosen, costs, reps
+    return chosen
 
 
-def total_plan_cost(chosen, costs):
-    return jnp.sum(jnp.where(chosen, costs, 0), axis=1)
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "wrap", "overhead", "include_source_leg",
+                     "interpret"),
+)
+def dpm_plan_weighted(
+    dest_mask: jax.Array,  # (P, NN)
+    src_xy: jax.Array,  # (P, 2)
+    dist: jax.Array,  # (NN, NN) provider-route hop counts
+    weight: jax.Array,  # (NN, NN) provider-route prices
+    *,
+    n: int,
+    m: int | None = None,
+    wrap: bool = False,
+    overhead: float = 0.0,
+    include_source_leg: bool = True,
+    interpret: bool | None = None,
+):
+    """Algorithm 1 batched under an arbitrary route-cost tensor.
+
+    The device twin of ``dpm_partition(..., cost_model=...)`` restricted to
+    MU-mode candidate pricing: ``(dist, weight, overhead)`` come from
+    ``repro.core.routefn.route_cost_matrices``, so energy / contention /
+    fault-penalty DPM (including detoured routes on a ``FaultyTopology``)
+    batch on device. Returns (chosen (P,24) bool, costs (P,24) f32,
+    reps (P,24) i32).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    costs, reps = dpm_cost_table_weighted(
+        dest_mask, src_xy, dist, weight,
+        n=n, m=m, wrap=wrap, overhead=overhead,
+        include_source_leg=include_source_leg, interpret=interpret,
+    )
+    return _greedy_merge(costs, reps), costs, reps

@@ -46,3 +46,48 @@ def dpm_cost_table_ref(
         costs.append(jnp.where(any_sel, ct, 0))
         reps.append(jnp.where(any_sel, rep, -1))
     return jnp.stack(costs, 1), jnp.stack(reps, 1)
+
+
+def dpm_cost_table_weighted_ref(
+    dest_mask, src_xy, dist, weight, *, n, m=None, wrap=False,
+    overhead=0.0, include_source_leg=True,
+):
+    """Pure-jnp oracle of the weighted kernel (same math, jnp.take gathers)."""
+    m = m or n
+    P, NN = dest_mask.shape
+    node = jnp.arange(NN, dtype=jnp.int32)
+    xs, ys = node % n, node // n
+    blabel = jnp.where(ys % 2 == 0, ys * n + xs, ys * n + (n - 1 - xs))
+    dm = dest_mask.astype(jnp.int32)
+    sx, sy = src_xy[:, 0:1], src_xy[:, 1:2]
+    dist = dist.astype(jnp.float32)
+    weight = weight.astype(jnp.float32)
+    dxs = _ring_delta(xs[None] - sx, n, wrap)
+    dys = _ring_delta(ys[None] - sy, m, wrap)
+    gx, lx, ex = dxs > 0, dxs < 0, dxs == 0
+    gy, ly, ey = dys > 0, dys < 0, dys == 0
+    parts = [
+        gx & gy, ex & gy, lx & gy, lx & ey,
+        lx & ly, ex & ly, gx & ly, gx & ey,
+    ]
+    src_idx = sy[:, 0] * n + sx[:, 0]
+    dsrc = jnp.take(dist, src_idx, axis=0).astype(jnp.int32)
+    w_src = jnp.take(weight, src_idx, axis=0)
+    costs, reps = [], []
+    for ids in CANDS:
+        cm = parts[ids[0]]
+        for i in ids[1:]:
+            cm = cm | parts[i]
+        sel = (dm > 0) & cm
+        any_sel = sel.any(1)
+        key = jnp.where(sel, dsrc * BIG + blabel[None], jnp.int32(2**30))
+        rep = jnp.argmin(key, 1).astype(jnp.int32)
+        w_rep = jnp.take(weight, rep, axis=0)
+        cnt = jnp.sum(sel.astype(jnp.float32), 1)
+        ct = jnp.sum(jnp.where(sel, w_rep, 0.0), 1)
+        ct = ct + jnp.maximum(cnt - 1.0, 0.0) * float(overhead)
+        if include_source_leg:
+            ct = ct + jnp.take_along_axis(w_src, rep[:, None], 1)[:, 0]
+        costs.append(jnp.where(any_sel, ct, 0.0))
+        reps.append(jnp.where(any_sel, rep, -1))
+    return jnp.stack(costs, 1), jnp.stack(reps, 1)

@@ -27,6 +27,10 @@ class NoCConfig:
     n: int = 8  # 8x8 mesh
     m: int | None = None
     topology: str = "mesh"  # "mesh" | "torus" (core.topology.make_topology)
+    # Broken bidirectional links ((u, v) coordinate pairs): both simulators
+    # build a FaultyTopology, plan detours through the route-provider layer
+    # (core.routefn), and refuse plans that traverse a broken link.
+    broken_links: tuple = ()
     vcs_per_class: int = 2  # 4 VCs total: 2 high-channel + 2 low-channel
     buffer_depth: int = 4  # flits per VC FIFO
     flits_per_packet: int = 4

@@ -99,7 +99,9 @@ class SimStats:
 class WormholeSim:
     def __init__(self, cfg: NoCConfig, measure_window: tuple[int, int] | None = None):
         self.cfg = cfg
-        self.g: MeshGrid = make_topology(cfg.topology, cfg.n, cfg.m)
+        self.g: MeshGrid = make_topology(
+            cfg.topology, cfg.n, cfg.m, cfg.broken_links
+        )
         self.packets: list[_Pkt] = []
         self.fifos: dict[Link, list[deque]] = {}  # link -> per-VC FIFOs
         self.vc_owner: dict[tuple[Link, int], int] = {}
@@ -143,6 +145,22 @@ class WormholeSim:
         )
 
     def add_plan(self, plan: MulticastPlan, enqueue_time: int) -> list[int]:
+        """Ingest a pre-planned multicast.
+
+        On a degraded topology (``cfg.broken_links``) every path is checked
+        hop by hop: a plan that would push a flit across a broken link is
+        refused outright — routes must come from the fault-aware provider
+        (``add_request`` does), not from a healthy-topology plan.
+        """
+        is_broken = getattr(self.g, "is_broken", None)
+        if is_broken is not None:
+            for path in plan.paths:
+                for u, v in zip(path.hops, path.hops[1:]):
+                    if is_broken(u, v):
+                        raise ValueError(
+                            f"plan {plan.algorithm!r} traverses broken link "
+                            f"({u}, {v}); replan on the degraded topology"
+                        )
         base = len(self.packets)
         pids = []
         for path in plan.paths:
@@ -292,8 +310,12 @@ class WormholeSim:
                     self.stats.xbar_traversals += 1
                     self.stats.flit_link_traversals += 1
                     if fid == 0:
+                        # first header arrival per node: releases relayed
+                        # children (DPM MU re-injection and the degraded-
+                        # topology monotone segments) at any hop, delivery
+                        # or not
                         node = p.hops[to_stage + 1]
-                        if node in p.deliveries and node not in p.header_times:
+                        if node not in p.header_times:
                             p.header_times[node] = now
                     if fid == F - 1:
                         self._tail_arrived(p, to_stage, now)

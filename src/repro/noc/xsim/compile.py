@@ -98,13 +98,26 @@ def compile_workload(
 
     ``algo`` is resolved through the routing-algorithm registry (name or
     ``RoutingAlgorithm`` instance); ``cost_model`` optionally overrides the
-    objective cost-sensitive algorithms plan under.
+    objective cost-sensitive algorithms plan under. With
+    ``cfg.broken_links`` set, plans come from the fault-aware route
+    provider on the degraded topology, and every lowered hop is re-checked:
+    a route crossing a broken link is refused before any tensor is built
+    (the same contract as ``WormholeSim.add_plan``).
     """
-    g = make_topology(cfg.topology, cfg.n, cfg.m)
+    g = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
     rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid)
     for r in workload.requests:
         pl_ = plan(algo, g, r.src, r.dests, cost_model=cost_model)
         _lower_plan(pl_, r.time, rows)
+    is_broken = getattr(g, "is_broken", None)
+    if is_broken is not None:
+        for hops, *_ in rows:
+            for u, v in zip(hops, hops[1:]):
+                if is_broken(u, v):
+                    raise ValueError(
+                        f"compiled route traverses broken link ({u}, {v}); "
+                        f"replan on the degraded topology"
+                    )
     P = len(rows)
     S = max((len(h) - 1 for h, *_ in rows), default=1)
     Pp = max(P, 1) if pad_packets is None else pad_packets
@@ -215,7 +228,9 @@ def _lower_plan(pl_: MulticastPlan, t: int, rows: list) -> None:
         if path.parent is not None:
             par = idx_map[path.parent]
             assert par is not None, "parent path must carry flits"
-        assert path.deliveries and path.hops[0] not in path.deliveries
+        # deliveries may be empty: transit segments of a degraded-topology
+        # monotone-segmented plan relay the worm without absorbing a copy
+        assert path.hops[0] not in path.deliveries
         idx_map.append(len(rows))
         rows.append((path.hops, list(path.deliveries), t, par))
 

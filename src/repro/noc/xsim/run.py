@@ -200,7 +200,7 @@ def xsimulate(
     algorithm that supports the configured topology. ``cost_model``
     optionally overrides the planning objective for the whole grid.
     """
-    topo = make_topology(cfg.topology, cfg.n, cfg.m)
+    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
     if algos is None:
         algos = tuple(available_algorithms(topo))
     resolved = [get_algorithm(a) for a in algos]

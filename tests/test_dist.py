@@ -51,6 +51,37 @@ def test_alltoall_schedule_covers_all_pairs_as_permutation_rounds():
         assert all(h <= n // 2 for rh in s.hops for h in rh)
 
 
+def test_degraded_mesh_multicast_schedule_still_covers():
+    """Broken ICI links: the schedule builders plan on the degraded torus
+    (detoured relay edges, segmentation-transparent hop counts) and every
+    rank is still served exactly once per request, under the ppermute
+    constraint, at >= the healthy hop total."""
+    from repro.core import DisconnectedError, faulty, torus
+    from repro.dist.multicast import schedule_multicasts
+
+    t = torus(4, 4)
+    dests = [(x, y) for x in range(4) for y in range(4) if (x, y) != (0, 0)]
+    healthy = schedule_multicasts(t, [((0, 0), dests)])
+    degraded = schedule_multicasts(
+        t, [((0, 0), dests)],
+        broken_links=[((0, 0), (1, 0)), ((2, 2), (2, 3))],
+    )
+    for s in (healthy, degraded):
+        served = [d for rnd in s.rounds for _, d in rnd]
+        assert sorted(served) == sorted(set(served))  # once per rank
+        assert set(served) == {t.idx(d) for d in dests}
+        for rnd in s.rounds:
+            assert len({a for a, _ in rnd}) == len(rnd)
+            assert len({b for _, b in rnd}) == len(rnd)
+    assert degraded.total_hops >= healthy.total_hops  # detours cost hops
+    # a rank cut off from the fabric fails loudly at planning time
+    cut = [((3, 3), (0, 3)), ((3, 3), (2, 3)), ((3, 3), (3, 0)),
+           ((3, 3), (3, 2))]
+    with pytest.raises(DisconnectedError):
+        schedule_multicasts(t, [((0, 0), [(3, 3)])], broken_links=cut)
+    assert faulty(t, ()) is t
+
+
 def test_dpm_alltoall_beats_ring_shift_on_link_bytes():
     from repro.dist.multicast import alltoall_schedule, ring_alltoall_schedule
 

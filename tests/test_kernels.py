@@ -235,3 +235,150 @@ def test_dpm_plan_greedy_invariants():
         assert cover & nonempty == nonempty
         tot = int(np.asarray(total_plan_cost(chosen, costs))[p])
         assert tot <= singles_cost[p].sum()  # merging never hurts
+
+
+# ---------------------------------------------------------------------------
+# dpm_cost — weighted route tensors (route-provider layer, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def test_dpm_cost_weighted_hop_tensors_match_int_kernel():
+    """With hop-count route matrices the weighted kernel reproduces the
+    analytic kernel bit for bit, on mesh and torus geometry."""
+    from repro.core import route_cost_matrices, torus
+    from repro.kernels.dpm_cost.dpm_cost import dpm_cost_table_weighted
+    from repro.kernels.dpm_cost.ref import dpm_cost_table_weighted_ref
+
+    for topo, wrap in ((grid(8), False), (torus(8), True)):
+        masks, sxy, _ = _instances(8, 8, 17, seed=5 + wrap)
+        dist, w, oh = route_cost_matrices(topo)
+        ck, rk = dpm_cost_table(masks, sxy, n=8, wrap=wrap, interpret=True)
+        cw, rw = dpm_cost_table_weighted(
+            masks, sxy, jnp.array(dist), jnp.array(w),
+            n=8, wrap=wrap, overhead=oh, interpret=True, tile=8,
+        )
+        cr, rr = dpm_cost_table_weighted_ref(
+            masks, sxy, jnp.array(dist), jnp.array(w), n=8, wrap=wrap,
+            overhead=oh,
+        )
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cw, np.int32))
+        np.testing.assert_array_equal(np.asarray(rk), np.asarray(rw))
+        np.testing.assert_array_equal(np.asarray(cw), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(rw), np.asarray(rr))
+
+
+def test_dpm_cost_weighted_vs_host_on_degraded_mesh():
+    """Fault-priced batching: with (dist, weight) lowered from a degraded
+    8x8 mesh the kernel's candidate costs equal the host cost model
+    exactly (detoured integer hop counts), and reps follow the degraded
+    Definition 1 distances."""
+    from repro.core import faulty, get_cost_model, route_cost_matrices
+    from repro.kernels.dpm_cost.dpm_cost import dpm_cost_table_weighted
+
+    n = 8
+    fg = faulty(
+        grid(n), [((3, 3), (4, 3)), ((3, 4), (3, 5)), ((0, 0), (1, 0))]
+    )
+    masks, sxy, insts = _instances(n, n, 21, seed=7)
+    dist, w, oh = route_cost_matrices(fg)
+    cw, rw = dpm_cost_table_weighted(
+        masks, sxy, jnp.array(dist), jnp.array(w), n=n, overhead=oh,
+        interpret=True, tile=8,
+    )
+    for p, (src, dests) in enumerate(insts):
+        parts = basic_partitions(src, dests, fg)
+        for ci, ids in enumerate(ALL_CANDIDATE_IDS):
+            union = [d for i in ids for d in parts[i]]
+            cc = candidate_cost(fg, src, ids, union)
+            host = (cc.cost_mu + cc.source_leg) if union else 0
+            assert host == float(cw[p, ci]), (p, ids)
+            if union:
+                assert int(rw[p, ci]) == fg.idx(cc.rep)
+
+    # an arbitrary float model (energy) batches too, to f32 rounding
+    cm = get_cost_model("energy")
+    dist_e, w_e, oh_e = route_cost_matrices(fg, cm)
+    ce, re = dpm_cost_table_weighted(
+        masks, sxy, jnp.array(dist_e), jnp.array(w_e), n=n, overhead=oh_e,
+        interpret=True, tile=8,
+    )
+    for p, (src, dests) in enumerate(insts[:5]):
+        parts = basic_partitions(src, dests, fg)
+        for ci, ids in enumerate(ALL_CANDIDATE_IDS):
+            union = [d for i in ids for d in parts[i]]
+            if not union:
+                continue
+            cc = candidate_cost(fg, src, ids, union, cm)
+            assert float(ce[p, ci]) == pytest.approx(
+                cc.cost_mu + cc.source_leg, rel=1e-5
+            )
+
+
+def test_dpm_plan_weighted_matches_int_plan_under_hop_weights():
+    from repro.core import route_cost_matrices
+    from repro.kernels.dpm_cost.ops import dpm_plan_weighted
+
+    n = 8
+    masks, sxy, _ = _instances(n, n, 32, seed=13)
+    dist, w, oh = route_cost_matrices(grid(n))
+    ch0, *_ = dpm_plan(masks, sxy, n=n, interpret=True)
+    chw, cw, rw = dpm_plan_weighted(
+        masks, sxy, jnp.array(dist), jnp.array(w), n=n, overhead=oh,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ch0), np.asarray(chw))
+
+
+def _host_greedy(costs, reps):
+    """Host-semantics greedy merge over one candidate table (the exact
+    Algorithm 1 loop of dpm_partition: max saving, then fewer partitions,
+    then smallest index; leftover non-empty singles appended)."""
+    nonempty = reps >= 0
+    savings = {}
+    for ci, ids in enumerate(CANDS):
+        if len(ids) == 1 or not nonempty[ci]:
+            continue
+        savings[ci] = max(0.0, sum(costs[i] for i in ids) - costs[ci])
+    chosen = np.zeros(24, bool)
+    covered: set = set()
+    while True:
+        best, best_a = None, 0
+        for ci, a in savings.items():
+            if a <= 0:
+                continue
+            ids = CANDS[ci]
+            if (
+                best is None
+                or a > best_a
+                or (a == best_a and (len(ids), ids) < (len(CANDS[best]),
+                                                       CANDS[best]))
+            ):
+                best, best_a = ci, a
+        if best is None:
+            break
+        chosen[best] = True
+        covered |= set(CANDS[best])
+        for ci in list(savings):
+            if covered & set(CANDS[ci]):
+                savings[ci] = 0
+    for i in range(8):
+        if i not in covered and nonempty[i]:
+            chosen[i] = True
+    return chosen
+
+
+def test_dpm_plan_weighted_float_tie_breaks_match_host_greedy():
+    """Under a float objective (energy) the device merge must reproduce the
+    host loop's exact-tie semantics — near-tied float savings are where a
+    scalar priority encoding would silently pick the wrong candidate."""
+    from repro.core import get_cost_model, route_cost_matrices
+    from repro.kernels.dpm_cost.ops import dpm_plan_weighted
+
+    n = 8
+    masks, sxy, _ = _instances(n, n, 40, seed=17)
+    dist, w, oh = route_cost_matrices(grid(n), get_cost_model("energy"))
+    chw, cw, rw = dpm_plan_weighted(
+        masks, sxy, jnp.array(dist), jnp.array(w), n=n, overhead=oh,
+        interpret=True,
+    )
+    cw, rw, chw = np.asarray(cw), np.asarray(rw), np.asarray(chw)
+    for p in range(cw.shape[0]):
+        np.testing.assert_array_equal(chw[p], _host_greedy(cw[p], rw[p]), p)
