@@ -13,7 +13,12 @@ Protocol:
 * each rung replans every request on the degraded topology (the plan cache
   keys on the fault set) and runs the cycle-accurate ``WormholeSim``;
   per-rung rows report average latency, dynamic energy, planned hop
-  totals, and how many plans actually changed vs the healthy mesh.
+  totals, and how many plans actually changed vs the healthy mesh;
+* a clustered-fault rung on top of the ladder: one full *router* failure
+  (``core.router_failure`` — every link incident to the node breaks at
+  once), with the dead node filtered out of sources/destinations; the row
+  quantifies detouring around a region vs the same number of scattered
+  link faults.
 
 The committed artifact (results/fault_resilience.json) records the ladder;
 the CSV rows gate on the structural invariants (all packets drain, no
@@ -103,12 +108,57 @@ def run(quick: bool = False, algos=None):
                 "drained": st.packets_finished == st.packets_created,
             })
 
+    # --- clustered fault region: one failed router (core.router_failure) --
+    # the dead node loses every incident link at once; traffic to/from it
+    # is filtered (unreachable by construction), everything else detours
+    from dataclasses import replace as _replace
+
+    from repro.core import router_failure
+    from repro.noc.traffic import Workload
+
+    dead = (4, 3)  # interior router: 4 incident links, worst detour case
+    cluster = router_failure(g, dead)
+    reqs = []
+    for r in wl.requests:
+        if r.src == dead:
+            continue
+        dests = [d for d in r.dests if d != dead]
+        if dests:
+            reqs.append(_replace(r, dests=dests))
+    wl_c = Workload(name=f"{wl.name}-minus-{dead}", requests=reqs,
+                    horizon=wl.horizon)
+    router_fault: dict[str, dict] = {}
+    for a in algos:
+        cfg_h = NoCConfig(warmup=50, drain_grace=4000)
+        cfg_c = NoCConfig(warmup=50, drain_grace=4000, broken_links=cluster)
+        topo_c = make_topology(cfg_c.topology, cfg_c.n, cfg_c.m,
+                               cfg_c.broken_links)
+        st_h = simulate(cfg_h, wl_c, a)
+        st_c = simulate(cfg_c, wl_c, a)
+        plans_c = [plan(a, topo_c, r.src, r.dests) for r in wl_c.requests]
+        plans_h = [plan(a, g, r.src, r.dests) for r in wl_c.requests]
+        changed = sum(
+            1 for p, hp in zip(plans_c, plans_h)
+            if [q.hops for q in p.paths] != [q.hops for q in hp.paths]
+        )
+        router_fault[a] = {
+            "dead_router": list(dead),
+            "broken_links": len(cluster),
+            "avg_latency_healthy": round(st_h.avg_latency, 3),
+            "avg_latency_cluster": round(st_c.avg_latency, 3),
+            "planned_hops_healthy": sum(p.total_hops for p in plans_h),
+            "planned_hops_cluster": sum(p.total_hops for p in plans_c),
+            "plans_changed": changed,
+            "drained": st_c.packets_finished == st_c.packets_created,
+        }
+
     data = {
         "mesh": "8x8", "rate": rate, "cycles": cycles,
         "counts": counts, "algos": algos,
         "fault_ladder": {str(k): [list(map(list, l)) for l in ladder[k]]
                          for k in counts},
         "curve": curve,
+        "router_fault": router_fault,
         "notes": (
             "nested connected fault sets; every request replanned on the "
             "degraded topology via the route-provider layer; the simulator "
@@ -136,5 +186,14 @@ def run(quick: bool = False, algos=None):
             f"latency_x{worst['avg_latency'] / max(1e-9, base['avg_latency']):.3f};"
             f"energy_x{worst['dyn_energy_pj'] / max(1e-9, base['dyn_energy_pj']):.3f};"
             f"plans_changed={worst['plans_changed_vs_healthy']}",
+        ))
+    for a, rf in router_fault.items():
+        assert rf["drained"], f"{a}: packets lost around failed router"
+        assert rf["plans_changed"] > 0, f"{a}: no plan adapted to the cluster"
+        rows.append((
+            f"fault_resilience/{a}/router_failure", 0.0,
+            f"dead={rf['dead_router']};links={rf['broken_links']};"
+            f"latency_x{rf['avg_latency_cluster'] / max(1e-9, rf['avg_latency_healthy']):.3f};"
+            f"plans_changed={rf['plans_changed']}",
         ))
     return rows

@@ -68,6 +68,7 @@ from .routefn import (
     faulty,
     provider_for,
     route_cost_matrices,
+    router_failure,
 )
 from .routing import (
     dual_path_cost,
@@ -131,6 +132,7 @@ __all__ = [
     "representative",
     "ring_delta",
     "route_cost_matrices",
+    "router_failure",
     "segment_plan_for_faults",
     "temporary_algorithm",
     "torus",

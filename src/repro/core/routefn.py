@@ -190,6 +190,28 @@ def faulty(base: MeshGrid, broken: tuple | list | set) -> MeshGrid:
     return _faulty(base, tuple(sorted(canon)))
 
 
+def router_failure(topo: MeshGrid, *nodes: Coord) -> tuple[Link, ...]:
+    """Clustered fault region: a failed *router* takes down every link
+    incident to it (the paper's link-fault model composes — a router fault
+    is just the closure of its port links).
+
+    Returns the canonical link tuple, ready for ``faulty(topo, links)`` or
+    ``NoCConfig(broken_links=links)``. Composes with an already-degraded
+    topology (links broken twice stay broken once). The failed router
+    itself becomes unreachable — callers must keep it out of source and
+    destination sets (planning to it raises ``DisconnectedError``).
+    """
+    base = topo.base if isinstance(topo, FaultyTopology) else topo
+    links: set[Link] = set()
+    for node in nodes:
+        x, y = node
+        if not base.in_bounds(x, y):
+            raise ValueError(f"{node} is not a node of {base}")
+        for v in base.neighbors(x, y):
+            links.add(_canon(base, (x, y), v))
+    return tuple(sorted(links))
+
+
 @functools.lru_cache(maxsize=32_768)
 def _bfs_from(topo: FaultyTopology, src: Coord) -> dict[Coord, tuple[int, Coord]]:
     """BFS tree over the degraded graph: node -> (distance, predecessor).

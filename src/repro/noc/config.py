@@ -43,6 +43,11 @@ class NoCConfig:
     # packets deliver.
     warmup: int = 200
     drain_grace: int = 3000
+    # xsim cycle-engine backend: None/"auto" picks "ref" on CPU and
+    # "pallas" (the fused chunk kernel) on TPU/GPU; "pallas_interpret"
+    # runs the kernel path on CPU for validation. An explicit ``backend=``
+    # argument to ``xsimulate`` overrides this.
+    xsim_backend: str | None = None
 
     @property
     def rows(self) -> int:

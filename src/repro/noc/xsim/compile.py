@@ -30,6 +30,7 @@ entries hold link 0 and are unreachable (``fpos < num_stages`` gating).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -68,14 +69,28 @@ class CompiledTraffic:
     link: np.ndarray  # int32
     vcls: np.ndarray  # int32; 0 HIGH / 1 LOW
     deliver: np.ndarray  # bool
+    # compact delivery-slot index: -1 where not a delivery point, else a
+    # dense 0..nd-1 id. The engine scatters arrival times into an (nd,)-flat
+    # array instead of carrying the full (P, S) dtime plane through the scan
+    # (most of which is never written — delivery points are sparse).
+    dslot: np.ndarray  # int32
     node: np.ndarray  # int32
-    # per-lane static injection order (2NN, Q): pids by (enqueue, pid), -1 pad
+    # per-lane static injection order for ROOT lanes (2NN, Q): pids by
+    # (enqueue, pid), -1 pad. Child lanes are all -1: children inject in
+    # dynamic release order through the per-node ``chl`` table instead.
     lane_seq: np.ndarray
     # child (DPM re-injection) table: (C,) rows + (P,) pid -> row map
     child_ix: np.ndarray  # (P,) int32; -1 = root
+    child_pid: np.ndarray  # (C,) int32 — row -> packet id
     child_parent: np.ndarray  # (C,) int32
     child_rs: np.ndarray  # (C,) int32 — parent stage releasing the child
     child_enq: np.ndarray  # (C,) int32
+    # (C,) directed link whose header arrival releases the child: the link
+    # feeding the parent's ``release_stage`` FIFO (the representative node)
+    watch_link: np.ndarray
+    # children grouped by injection node (NN, QC) int32 child rows, -1 pad —
+    # the relay lane's dynamic-order candidate set
+    chl: np.ndarray
 
     @property
     def num_packets(self) -> int:
@@ -137,27 +152,41 @@ def compile_workload(
     deliver = np.zeros((Pp, Sp), bool)
     node = np.zeros((Pp, Sp), np.int32)
 
-    # per-stage tables, vectorized over one flat hop-pair array (the python
-    # per-hop loop dominated lowering time on big sweeps)
+    # per-stage tables, vectorized over one flat hop-pair array; per-packet
+    # scalars accumulate in python lists and assign once (scalar numpy
+    # writes dominated lowering time on big sweeps)
     n, m = g.n, g.rows
     flat_uv: list[Coord] = []
     lens = np.zeros(P, np.int64)
+    enq_l, par_l, lane_l, ej_l = [], [], [], []
+    del_p: list[int] = []
+    del_s: list[int] = []
     for pid, (hops, deliveries, t, par) in enumerate(rows):
         ns = len(hops) - 1
         lens[pid] = ns
         flat_uv.extend(hops)
-        enqueue[pid] = t
-        parent[pid] = -1 if par is None else par
-        lane[pid] = g.idx(hops[0]) * 2 + (0 if par is None else 1)
-        num_stages[pid] = ns
-        eject_node[pid] = g.idx(hops[-1])
-        valid[pid] = True
+        enq_l.append(t)
+        par_l.append(-1 if par is None else par)
+        x0, y0 = hops[0]
+        lane_l.append((y0 * n + x0) * 2 + (0 if par is None else 1))
+        xe, ye = hops[-1]
+        ej_l.append(ye * n + xe)
         for d in deliveries:
-            deliver[pid, hops.index(d, 1) - 1] = True
+            del_p.append(pid)
+            del_s.append(hops.index(d, 1) - 1)
         if par is not None:
             release_stage[pid] = rows[par][0].index(hops[0], 1) - 1
     if P:
-        hv = np.array(flat_uv, np.int64)  # all hops, path-concatenated
+        enqueue[:P] = enq_l
+        parent[:P] = par_l
+        lane[:P] = lane_l
+        num_stages[:P] = lens
+        eject_node[:P] = ej_l
+        valid[:P] = True
+        deliver[del_p, del_s] = True
+        hv = np.fromiter(
+            (c for xy in flat_uv for c in xy), np.int64, 2 * len(flat_uv)
+        ).reshape(-1, 2)  # all hops, path-concatenated
         starts = np.cumsum(lens + 1) - (lens + 1)  # path offsets incl. hop 0
         total = int(lens.sum())
         pidx = np.repeat(np.arange(P), lens)
@@ -176,11 +205,15 @@ def compile_workload(
         vcls[pidx, sidx] = labv < labu  # 0 HIGH (label up), 1 LOW
         node[pidx, sidx] = vy * n + vx
 
-    # static per-lane injection order: (enqueue, pid) — the host sim's FIFO
-    # release order for roots; for children an approximation of the dynamic
-    # parent-arrival order (see step.py fidelity notes)
+    # static per-lane injection order for roots: (enqueue, pid) — the host
+    # sim's FIFO arrival order (roots enter their queue at enqueue time).
+    # Children are NOT in lane_seq: their queue order is dynamic (parent
+    # header arrival), modeled through the per-node ``chl`` table below.
     by_lane: dict[int, list[int]] = {}
-    order = sorted(range(P), key=lambda p: (int(enqueue[p]), p))
+    order = sorted(
+        (p for p in range(P) if parent[p] < 0),
+        key=lambda p: (int(enqueue[p]), p),
+    )
     for pid in order:
         by_lane.setdefault(int(lane[pid]), []).append(pid)
     Qn = max((len(v) for v in by_lane.values()), default=1)
@@ -191,28 +224,101 @@ def compile_workload(
     child_rows = np.flatnonzero(parent >= 0)
     C = max(1, len(child_rows))
     child_ix = np.full(Pp, -1, np.int32)
+    child_pid = np.zeros(C, np.int32)
     child_parent = np.zeros(C, np.int32)
     child_rs = np.full(C, NEVER, np.int32)
     child_enq = np.full(C, NEVER, np.int32)
+    watch_link = np.zeros(C, np.int32)
+    by_node: dict[int, list[int]] = {}
     for row, pid in enumerate(child_rows):
         child_ix[pid] = row
+        child_pid[row] = pid
         child_parent[row] = parent[pid]
         child_rs[row] = release_stage[pid]
         child_enq[row] = enqueue[pid]
+        # the parent's header enters stage ``release_stage`` through this
+        # link; its arrival event is what releases the child (row order is
+        # pid order — the host sim's same-cycle append tie-break)
+        watch_link[row] = link[parent[pid], release_stage[pid]]
+        by_node.setdefault(int(lane[pid]) // 2, []).append(row)
+    QCn = max((len(v) for v in by_node.values()), default=1)
+    chl = np.full((g.num_nodes, QCn), -1, np.int32)
+    for nd, rws in by_node.items():
+        chl[nd, : len(rws)] = rws
 
-    # age-key arithmetic must stay inside int32 (see step.py)
+    dslot = np.full((Pp, Sp), -1, np.int32)
+    dslot.ravel()[np.flatnonzero(deliver.ravel())] = np.arange(
+        int(deliver.sum()), dtype=np.int32
+    )
+
+    # the (enqueue, pid, fid) age keys must stay strictly below the NOC_INF
+    # sentinel (2**30) so a real candidate always beats the no-candidate pad
     max_key = (int(enqueue[valid].max(initial=0)) + 1) * Pp * cfg.flits_per_packet
-    assert max_key < 2**28, f"workload too large for int32 age keys ({max_key})"
+    assert max_key < 2**30, f"workload too large for int32 age keys ({max_key})"
     return CompiledTraffic(
         n=g.n, m=g.rows, kind=g.kind,
         num_nodes=g.num_nodes, num_links=g.num_nodes * 4,
         horizon=workload.horizon,
         enqueue=enqueue, parent=parent, release_stage=release_stage,
         lane=lane, num_stages=num_stages, eject_node=eject_node, valid=valid,
-        link=link, vcls=vcls, deliver=deliver, node=node,
-        lane_seq=lane_seq, child_ix=child_ix, child_parent=child_parent,
-        child_rs=child_rs, child_enq=child_enq,
+        link=link, vcls=vcls, deliver=deliver, dslot=dslot, node=node,
+        lane_seq=lane_seq, child_ix=child_ix, child_pid=child_pid,
+        child_parent=child_parent, child_rs=child_rs, child_enq=child_enq,
+        watch_link=watch_link, chl=chl,
     )
+
+
+@functools.lru_cache(maxsize=64)
+def geometry_tables(kind: str, n: int, m: int, V: int) -> dict[str, np.ndarray]:
+    """Static router geometry for the fused cycle kernel (numpy, topology-only).
+
+    The fused engine's candidate space is every VC FIFO plus every NI lane,
+    flattened: FIFO ``(l, v)`` is candidate ``l * W + v`` (``W = 2V`` VCs per
+    directed link), lane ``q`` is candidate ``L * W + q``, and one trailing
+    dummy candidate ``L * W + 2 * NN`` absorbs padding. Arbitration is a
+    dense masked min over ``node_ports[v]`` — the FIFOs of the four links
+    *into* node ``v`` (a flit can only request ``v``'s output links from
+    there) plus ``v``'s two NI lanes — so each candidate appears in exactly
+    one node's port list and winner masks map back through the static
+    ``cand_node``/``cand_port`` inverse with a gather, never a scatter.
+    """
+    NN = n * m
+    L = NN * 4
+    W = 2 * V
+    PORTS = 4 * W + 2
+    CAND = L * W + 2 * NN
+    wrap = kind == "torus"
+    # deltas per direction index (+x, -x, +y, -y) — the link-id convention
+    DX = (1, -1, 0, 0)
+    DY = (0, 0, 1, -1)
+    node_ports = np.full((NN, PORTS), CAND, np.int32)  # CAND = dummy pad
+    cand_node = np.zeros(CAND + 1, np.int32)
+    cand_port = np.zeros(CAND + 1, np.int32)
+    for vy in range(m):
+        for vx in range(n):
+            v = vy * n + vx
+            for d in range(4):
+                ux, uy = vx - DX[d], vy - DY[d]
+                if wrap:
+                    ux, uy = ux % n, uy % m
+                elif not (0 <= ux < n and 0 <= uy < m):
+                    continue
+                link = (uy * n + ux) * 4 + d
+                for w in range(W):
+                    cand = link * W + w
+                    node_ports[v, d * W + w] = cand
+                    cand_node[cand] = v
+                    cand_port[cand] = d * W + w
+            for q in range(2):
+                cand = L * W + 2 * v + q
+                node_ports[v, 4 * W + q] = cand
+                cand_node[cand] = v
+                cand_port[cand] = 4 * W + q
+    return {
+        "node_ports": node_ports,
+        "cand_node": cand_node,
+        "cand_port": cand_port,
+    }
 
 
 def _lower_plan(pl_: MulticastPlan, t: int, rows: list) -> None:
@@ -252,12 +358,15 @@ def stack_traffic(
     Sp = max(t.max_stages for t in traffics)
     Qp = max(t.lane_seq.shape[1] for t in traffics)
     Cp = max(t.child_parent.shape[0] for t in traffics)
+    QCp = max(t.chl.shape[1] for t in traffics)
 
     def pad(t: CompiledTraffic) -> CompiledTraffic:
         dp = Pp - t.enqueue.shape[0]
         ds = Sp - t.max_stages
         pad1 = lambda a, fill: np.pad(a, (0, dp), constant_values=fill)
-        pad2 = lambda a: np.pad(a, ((0, dp), (0, ds)))
+        pad2 = lambda a, fill=0: np.pad(
+            a, ((0, dp), (0, ds)), constant_values=fill
+        )
         dc = Cp - t.child_parent.shape[0]
         padc = lambda a, fill: np.pad(a, (0, dc), constant_values=fill)
         return CompiledTraffic(
@@ -268,22 +377,30 @@ def stack_traffic(
             num_stages=pad1(t.num_stages, 1), eject_node=pad1(t.eject_node, 0),
             valid=pad1(t.valid, False),
             link=pad2(t.link), vcls=pad2(t.vcls),
-            deliver=pad2(t.deliver), node=pad2(t.node),
+            deliver=pad2(t.deliver), dslot=pad2(t.dslot, -1),
+            node=pad2(t.node),
             lane_seq=np.pad(
                 t.lane_seq, ((0, 0), (0, Qp - t.lane_seq.shape[1])),
                 constant_values=-1,
             ),
             child_ix=pad1(t.child_ix, -1),
+            child_pid=padc(t.child_pid, 0),
             child_parent=padc(t.child_parent, 0),
             child_rs=padc(t.child_rs, NEVER),
             child_enq=padc(t.child_enq, NEVER),
+            watch_link=padc(t.watch_link, 0),
+            chl=np.pad(
+                t.chl, ((0, 0), (0, QCp - t.chl.shape[1])),
+                constant_values=-1,
+            ),
         )
 
     padded = [pad(t) for t in traffics]
     fields = (
         "enqueue", "parent", "release_stage", "lane", "num_stages",
-        "eject_node", "valid", "link", "vcls", "deliver", "node",
-        "lane_seq", "child_ix", "child_parent", "child_rs", "child_enq",
+        "eject_node", "valid", "link", "vcls", "deliver", "dslot", "node",
+        "lane_seq", "child_ix", "child_pid", "child_parent", "child_rs",
+        "child_enq", "watch_link", "chl",
     )
     stacked = {f: np.stack([getattr(t, f) for t in padded]) for f in fields}
     return padded[0], stacked

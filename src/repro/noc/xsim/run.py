@@ -1,18 +1,20 @@
-"""Batch runner: compile -> one jitted, vmapped scan -> SimStats views.
+"""Batch runner: compile -> one jitted, vmapped fused-cycle run -> SimStats.
 
 ``xsimulate(cfg, workloads, algos)`` lowers every (workload, algorithm) pair
 with the compiler, pads the batch to one common (P, S) shape, and runs the
-whole grid through a single ``jax.vmap``-ed ``jax.lax.scan`` dispatch —
-seeds, injection rates, and routing algorithms all ride the batch axis.
-``latency_vs_rate_batched`` is the fig6 sweep in one call.
+whole grid through a single ``jax.vmap``-ed dispatch of the fused cycle
+engine (``kernels.noc_cycle``) — seeds, injection rates, and routing
+algorithms all ride the batch axis, and multi-device hosts additionally
+pmap-shard it.
 
 The cycle count is fixed (``max horizon + drain_grace``): scans cannot exit
 early, so unlike the host sim there is no drain-and-stop — saturation points
 cost the same as idle ones, which is exactly why the batched sweep wins.
 
-The slot pool starts small and doubles on overflow (an in-flight-worm count
-above K) up to the capacity bound ``2*V*L + 2*NN`` that can never overflow,
-so light sweeps stay cheap and saturated ones stay correct.
+There is no slot pool anymore: the packed router-centric state is sized by
+the network itself (every in-flight worm holds a VC FIFO or an NI lane
+front), so per-cycle cost is bounded by ``L * 2V + 2 * NN`` regardless of
+injection rate or backlog, and the old overflow/regrow loop is gone.
 """
 from __future__ import annotations
 
@@ -29,33 +31,34 @@ from ..simulator import SimStats
 from ..traffic import Workload
 from ...core.algo import available_algorithms, get_algorithm
 from ...core.topology import make_topology
-from ...kernels.noc_step.ops import resolve_backend
-from .compile import CompiledTraffic, compile_workload, stack_traffic
-from .step import CTR, init_state, make_step
+from .compile import (
+    CompiledTraffic,
+    compile_workload,
+    geometry_tables,
+    stack_traffic,
+)
+from .step import CTR, run_cycles
 
 
 def _run_one(tr: dict, T: int, F: int, V: int, BD: int, L: int, NN: int,
-             K: int, backend: str):
-    P, S = tr["link"].shape
-    C = tr["child_parent"].shape[0]
-    step = make_step(tr, F=F, V=V, BD=BD, L=L, NN=NN, K=K, backend=backend)
-    state = init_state(P, F, S, L, NN, C, K)
-    state, _ = jax.lax.scan(step, state, jnp.arange(T, dtype=jnp.int32))
-    return {
-        "dtime": state.dtime,
-        "ctr": state.ctr,
-        "crel": state.crel,
-        "overflow": state.overflow,
-    }
+             ND: int, kind: str, n: int, m: int, backend: str):
+    geom = geometry_tables(kind, n, m, V)
+    return run_cycles(
+        tr, geom, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, backend=backend
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("T", "F", "V", "BD", "L", "NN", "K", "backend")
+    jax.jit,
+    static_argnames=(
+        "T", "F", "V", "BD", "L", "NN", "ND", "kind", "n", "m", "backend"
+    ),
 )
 def _run_batch(stacked: dict, T: int, F: int, V: int, BD: int, L: int,
-               NN: int, K: int, backend: str):
+               NN: int, ND: int, kind: str, n: int, m: int, backend: str):
     fn = functools.partial(
-        _run_one, T=T, F=F, V=V, BD=BD, L=L, NN=NN, K=K, backend=backend
+        _run_one, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, kind=kind, n=n,
+        m=m, backend=backend,
     )
     return jax.vmap(fn)(stacked)
 
@@ -96,7 +99,7 @@ class XSimResults:
     horizons: np.ndarray  # (W,) int
     warmup: int
     cycles: int  # scan length T
-    slots: int  # final slot-pool size K
+    slots: int  # structural worm capacity 2*V*L + 2*NN (informational)
     traffic: dict  # stacked compile tensors, numpy, leading axis B
     dtime: np.ndarray  # (B, P, S) int32
     ctr: np.ndarray  # (B, len(CTR)) int32
@@ -160,7 +163,8 @@ class XSimResults:
         return st.packets_finished == st.packets_created
 
     def slots_hwm(self) -> int:
-        """Max in-flight worms across the batch (for presizing ``slots``)."""
+        """Max in-flight worms across the batch (diagnostic: how much of the
+        structural ``slots`` capacity the sweep actually used)."""
         return int(self.ctr[:, CTR.index("slots_hwm")].max())
 
     def stats(self, w: int, a: int) -> SimStats:
@@ -174,9 +178,9 @@ class XSimResults:
         return st
 
 
-def _slot_bound(cfg: NoCConfig, num_nodes: int, num_links: int) -> int:
-    """K that can never overflow: every in-network worm holds >= 1 VC, plus
-    one possible lane front per lane."""
+def _capacity(cfg: NoCConfig, num_nodes: int, num_links: int) -> int:
+    """Structural in-flight worm bound: every in-network worm holds >= 1 VC
+    FIFO, plus one possible lane front per lane."""
     return 2 * cfg.vcs_per_class * num_links + 2 * num_nodes
 
 
@@ -199,14 +203,22 @@ def xsimulate(
     or ``RoutingAlgorithm`` instances); the default is every registered
     algorithm that supports the configured topology. ``cost_model``
     optionally overrides the planning objective for the whole grid.
+    ``backend`` (or ``cfg.xsim_backend``) selects the cycle engine; see
+    ``step.py``. ``slots`` is accepted for backwards compatibility and
+    ignored — the packed-plane engine has no slot pool to size.
     """
+    del slots  # legacy slot-pool hint: capacity is structural now
     topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
     if algos is None:
         algos = tuple(available_algorithms(topo))
     resolved = [get_algorithm(a) for a in algos]
     warmup = cfg.warmup if warmup is None else warmup
     drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
-    backend = resolve_backend(backend)
+    from ...kernels.noc_cycle import resolve_backend
+
+    backend = resolve_backend(
+        cfg.xsim_backend if backend is None else backend
+    )
     t0 = time.monotonic()
     traffics: list[CompiledTraffic] = []
     for wl in workloads:
@@ -220,22 +232,24 @@ def xsimulate(
             )
     ref, stacked = stack_traffic(traffics)
     T = max(wl.horizon for wl in workloads) + drain_grace
-    P = stacked["link"].shape[1]
-    cap = min(P, _slot_bound(cfg, ref.num_nodes, ref.num_links))
-    K = min(cap, 256) if slots is None else min(slots, cap)
+    ND = int(stacked["dslot"].max()) + 1  # flat delivery-slot space
     stacked_j = {k: jnp.asarray(v) for k, v in stacked.items()}
-    kw = dict(
+    out = _run_sharded(
+        stacked_j,
         T=T, F=cfg.flits_per_packet, V=cfg.vcs_per_class,
-        BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes,
-        backend=backend,
+        BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes, ND=ND,
+        kind=ref.kind, n=ref.n, m=ref.m, backend=backend,
     )
-    while True:
-        out = _run_sharded(stacked_j, K=K, **kw)
-        out = jax.tree_util.tree_map(np.asarray, out)  # blocks until ready
-        if not out["overflow"].any() or K >= cap:
-            break
-        K = min(max(K + K // 2, K + 64), cap)  # grow the pool and rerun
-    assert not out["overflow"].any(), "slot pool exceeded its capacity bound"
+    out = jax.tree_util.tree_map(np.asarray, out)  # blocks until ready
+    # scatter-compact flat delivery times -> the (B, P, S) view the results
+    # object (and the parity tests) consume
+    ds = stacked["dslot"]
+    B = ds.shape[0]
+    dtime = np.where(
+        ds >= 0,
+        out["dtime"][np.arange(B)[:, None, None], np.clip(ds, 0, ND)],
+        -1,
+    ).astype(np.int32)
     wall = time.monotonic() - t0
     return XSimResults(
         cfg=cfg,
@@ -243,9 +257,9 @@ def xsimulate(
         horizons=np.array([wl.horizon for wl in workloads]),
         warmup=warmup,
         cycles=T,
-        slots=K,
+        slots=_capacity(cfg, ref.num_nodes, ref.num_links),
         traffic=stacked,
-        dtime=out["dtime"],
+        dtime=dtime,
         ctr=out["ctr"],
         crel=out["crel"],
         wall_s=wall,

@@ -1,266 +1,38 @@
-"""One simulated cycle of the vectorized wormhole model, as masked array ops.
+"""xsim's per-cycle engine — now the fused ``kernels.noc_cycle`` kernel.
 
-The working set is a pool of ``K`` *slots* for in-flight worms, not the full
-packet list: packets backlogged in NI lane queues cost nothing until they
-reach the front of their lane (the host simulator's queues are modeled by
-static per-lane injection orders + one pointer per lane), so the per-cycle
-cost is bounded by network capacity — every in-network worm holds at least
-one VC or is a lane front, so ``K <= 2*V*L + 2*NN`` always suffices — and is
-independent of injection rate or backlog. That inversion is what makes the
-scan competitive: the event-ordered Python sim pays per queued event, xsim
-pays per (cycle, slot).
+The old per-worm slot pool (``SlotState``: ``sfpos[K, F]`` flit stages,
+slot allocation by cumsum/searchsorted, two ``kernels.noc_step`` segmented
+-min rounds and ~20 masked scatters per cycle) is gone. State lives in
+packed router-centric planes — per-(link, VC) FIFO ownership plus NI lane
+fronts — where both arbitration rounds are dense masked mins over each
+node's static input-port table and the *only* scatter left is the
+(L,)-sized delivery recording. See ``kernels/noc_cycle/ref.py`` and
+DESIGN.md §8 for the layout and the fusion boundaries.
 
-State layout (all dense, fixed shape — scan/vmap safe):
+Consequences surfaced here:
 
-* ``sfpos[K, F]`` stage of each flit of the slot's worm: -1 = in the source
-  NI, ``s`` in [0, num_stages) = in stage ``s``'s VC FIFO, ``num_stages`` =
-  ejected. Flit 0 is the header, flit F-1 the tail; positions are
-  non-increasing along the flit axis, and a flit is the *front* of its FIFO
-  iff the previous flit has already left its stage.
-* ``sp[K]``       packet id occupying the slot (-1 free); ``slot_of[P]``
-  the inverse map (set once — a packet is slotted exactly once).
-* ``vc_used[2L]`` VCs in use per (directed link, class) — credit state.
-* ``ptr``, ``front_slot`` per lane: the static-order injection queues.
-* ``crel[C]``     per-child released flag (DPM children release when the
-  parent header has entered the representative's stage — read through
-  ``slot_of``; a vacated or recycled parent slot means the parent header
-  passed everything, so the child is free).
-* ``dtime[P, S]`` tail-arrival cycle per delivery stage (-1 = pending).
+* No slot pool: capacity is structural (a worm in flight holds a VC FIFO
+  or an NI lane front), so there is no ``K`` to size, no overflow, and no
+  regrow-and-rerun loop in the runner.
+* ``backend=`` selects the whole-cycle engine now, not just arbitration:
+  ``ref`` (jnp scan — the CPU fast path), ``pallas`` (fused chunk kernel,
+  TPU/GPU), ``pallas_interpret`` (kernel semantics on CPU, bit-identical
+  to ``ref`` — CI's validation path). It threads from ``NoCConfig.
+  xsim_backend`` through ``xsimulate`` down to ``run_cycles``.
+* DPM children inject in dynamic parent-arrival order (the host sim's
+  release-order queues), closing the old static-order fidelity delta.
 
-Per cycle, two ``kernels.noc_step.arbitrate`` segmented-min rounds resolve
-the shared resources in the host sim's phase order: FIFO-front flits below
-their final stage request the link into their next stage (one winner per
-directed link; headers additionally need a free VC of the hop's label
-class, body flits a buffer credit), then — on post-move state — flits
-fronting their final stage request their node's ejection port. Ages are
-(enqueue, pid, fid), the host sim's sort key. The ejection round compacts
-to (K,) candidates because at most one flit per slot can front its final
-stage.
-
-Fidelity deltas vs the event-ordered host sim (DESIGN.md §5): admissibility
-uses start-of-cycle state (a VC freed in cycle t is re-allocable in t+1,
-where the host sim's sequential link loop can reuse it within t), and
-same-lane DPM children inject in static (enqueue, pid) order rather than
-dynamic parent-arrival order. Both shift individual stall cycles only —
-delivery sets are unaffected and average latency stays inside the
-documented 10% band.
+This module keeps the xsim-side surface: ``CTR`` counter names and the
+``run_cycles`` entry point the batch runner scans with.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from ...kernels.noc_step.noc_step import NOC_INF
-from ...kernels.noc_step.ops import arbitrate
-
-# counter indices (named after the SimStats fields they feed; see run.py —
-# slots_hwm is xsim-only: the in-flight-worm high-water mark, for sizing K)
-CTR = (
-    "flit_link_traversals", "buffer_writes", "buffer_reads",
-    "xbar_traversals", "arbitrations", "ni_flits", "packets_finished",
-    "slots_hwm",
+from ...kernels.noc_cycle import (  # noqa: F401  (re-exports)
+    CTR,
+    CycleState,
+    cycle_core,
+    init_planes,
+    run_cycles,
 )
-_I = {name: i for i, name in enumerate(CTR)}
 
-
-class SlotState(NamedTuple):
-    sfpos: jax.Array  # (K, F) int32
-    sp: jax.Array  # (K,) int32, -1 free
-    slot_of: jax.Array  # (P,) int32, -1 never slotted
-    vc_used: jax.Array  # (2L,) int32
-    ptr: jax.Array  # (2NN,) int32 — next lane_seq index per lane
-    front_slot: jax.Array  # (2NN,) int32, -1 none
-    crel: jax.Array  # (C,) bool
-    dtime: jax.Array  # (P, S) int32
-    ctr: jax.Array  # (len(CTR),) int32
-    overflow: jax.Array  # () bool — a lane needed a slot and none was free
-
-
-def init_state(P: int, F: int, S: int, L: int, NN: int, C: int,
-               K: int) -> SlotState:
-    return SlotState(
-        sfpos=jnp.full((K, F), -1, jnp.int32),
-        sp=jnp.full((K,), -1, jnp.int32),
-        slot_of=jnp.full((P,), -1, jnp.int32),
-        vc_used=jnp.zeros((2 * L,), jnp.int32),
-        ptr=jnp.zeros((2 * NN,), jnp.int32),
-        front_slot=jnp.full((2 * NN,), -1, jnp.int32),
-        crel=jnp.zeros((C,), bool),
-        dtime=jnp.full((P, S), -1, jnp.int32),
-        ctr=jnp.zeros((len(CTR),), jnp.int32),
-        overflow=jnp.zeros((), bool),
-    )
-
-
-def _front(sfpos: jax.Array) -> jax.Array:
-    """(K, F) bool: flit is the front of the FIFO it currently occupies."""
-    K = sfpos.shape[0]
-    return jnp.concatenate(
-        [jnp.ones((K, 1), bool), sfpos[:, :-1] > sfpos[:, 1:]], axis=1
-    )
-
-
-def make_step(tr: dict, *, F: int, V: int, BD: int, L: int, NN: int,
-              K: int, backend: str):
-    """Build the scan body over one compiled-traffic tensor dict ``tr``."""
-    enqueue = jnp.asarray(tr["enqueue"], jnp.int32)  # (P,)
-    lane = jnp.asarray(tr["lane"], jnp.int32)
-    ns = jnp.asarray(tr["num_stages"], jnp.int32)
-    eject_node = jnp.asarray(tr["eject_node"], jnp.int32)
-    link_t = jnp.asarray(tr["link"], jnp.int32)  # (P, S)
-    vcls_t = jnp.asarray(tr["vcls"], jnp.int32)
-    deliver_t = jnp.asarray(tr["deliver"], bool)
-    lane_seq = jnp.asarray(tr["lane_seq"], jnp.int32)  # (2NN, Q)
-    child_ix = jnp.asarray(tr["child_ix"], jnp.int32)  # (P,)
-    child_parent = jnp.asarray(tr["child_parent"], jnp.int32)  # (C,)
-    child_rs = jnp.asarray(tr["child_rs"], jnp.int32)
-    child_enq = jnp.asarray(tr["child_enq"], jnp.int32)
-
-    P, S = link_t.shape
-    Q = lane_seq.shape[1]
-    C = child_parent.shape[0]
-    kid = jnp.arange(K, dtype=jnp.int32)
-    fid = jnp.arange(F, dtype=jnp.int32)
-    is_hdr = (fid == 0)[None, :]
-
-    def _vci(spc, stage_idx):
-        """(link, class) slot index for per-slot stage indices."""
-        c = jnp.clip(stage_idx, 0, S - 1)
-        return link_t[spc, c] * 2 + vcls_t[spc, c]
-
-    def step(state: SlotState, t: jax.Array) -> tuple[SlotState, None]:
-        (sfpos, sp, slot_of, vc_used, ptr, front_slot, crel, dtime, ctr,
-         ovf) = state
-
-        # ---- 1. child release (parent header progress, pre-move state) --
-        ps = slot_of[jnp.clip(child_parent, 0, P - 1)]
-        ps_c = jnp.clip(ps, 0, K - 1)
-        # vacated/recycled parent slot => parent header passed everything
-        par_head = jnp.where(
-            ps < 0, -1,
-            jnp.where(sp[ps_c] == child_parent, sfpos[ps_c, 0], NOC_INF),
-        )
-        crel = crel | ((child_enq <= t) & (par_head >= child_rs))
-
-        # ---- 2. lane fronts + slot allocation ---------------------------
-        fs_c = jnp.clip(front_slot, 0, K - 1)
-        front_live = (
-            (front_slot >= 0) & (sp[fs_c] >= 0) & (sfpos[fs_c, F - 1] == -1)
-        )
-        need = ~front_live
-        cand_pid = jnp.take_along_axis(
-            lane_seq, jnp.clip(ptr, 0, Q - 1)[:, None], axis=1
-        )[:, 0]
-        qp = jnp.clip(cand_pid, 0, P - 1)
-        cix = child_ix[qp]
-        rel = jnp.where(
-            cix < 0, enqueue[qp] <= t, crel[jnp.clip(cix, 0, C - 1)]
-        )
-        want = need & (ptr < Q) & (cand_pid >= 0) & rel
-        free = sp < 0
-        fcum = jnp.cumsum(free)
-        nfree = fcum[-1]
-        wrank = jnp.cumsum(want) - 1
-        got = want & (wrank < nfree)
-        ovf = ovf | jnp.any(want & ~got)
-        # r-th free slot = first index where the running free count hits r+1
-        lane_slot = jnp.searchsorted(fcum, wrank + 1).astype(jnp.int32)
-        tgt = jnp.where(got, lane_slot, K)
-        sp = sp.at[tgt].set(cand_pid, mode="drop")
-        sfpos = sfpos.at[tgt].set(-1, mode="drop")
-        slot_of = slot_of.at[jnp.where(got, cand_pid, P)].set(
-            lane_slot, mode="drop"
-        )
-        front_slot = jnp.where(need, jnp.where(got, lane_slot, -1),
-                               front_slot)
-        ptr = ptr + got
-
-        # ---- 3. link arbitration ----------------------------------------
-        spc = jnp.clip(sp, 0, P - 1)
-        alive = sp >= 0
-        ns_s = ns[spc]
-        enq_s = enqueue[spc]
-        isf = front_slot[lane[spc]] == kid
-        front = _front(sfpos)
-        to = sfpos + 1
-        in_ni = sfpos == -1
-        can = front & alive[:, None]
-        move_c = can & (to < ns_s[:, None]) & (~in_ni | isf[:, None])
-        toc = jnp.clip(to, 0, S - 1)
-        lk = link_t[spc[:, None], toc]
-        vci_to = lk * 2 + vcls_t[spc[:, None], toc]
-        if BD >= F:
-            # a VC FIFO only ever holds its owner's flits, so with
-            # buffer_depth >= flits_per_packet the credit check cannot fail
-            body_ok = True
-        else:
-            occ_to = jnp.sum(
-                sfpos[:, None, :] == to[:, :, None], axis=2, dtype=jnp.int32
-            )
-            body_ok = occ_to < BD
-        adm = move_c & jnp.where(is_hdr, vc_used[vci_to] < V, body_ok)
-        # unique age key: (enqueue, pid, fid) lexicographic, int32-safe
-        # (compile.py asserts (max_enqueue + 1) * P * F < 2**28 < NOC_INF)
-        fkey = (enq_s[:, None] * P + spc[:, None]) * F + fid[None, :]
-        mv_win = arbitrate(adm, fkey, lk, L, backend=backend)
-        sfpos = sfpos + mv_win.astype(jnp.int32)
-        hdr_win = mv_win[:, 0]
-        tail_from = sfpos[:, F - 1] - mv_win[:, F - 1]  # pre-move position
-        tail_mv = mv_win[:, F - 1] & (tail_from >= 0)
-
-        # tail arrival records deliveries (first visit only, by construction)
-        to_tail = jnp.clip(to[:, F - 1], 0, S - 1)
-        del_here = mv_win[:, F - 1] & deliver_t[spc, to_tail]
-        dtime = dtime.at[jnp.where(del_here, spc, P), to_tail].set(
-            t, mode="drop"
-        )
-
-        # ---- 4. ejection (post-move state, host-sim phase order) --------
-        # at most one flit per slot can front the final stage, so the
-        # per-node round compacts to (K,) candidates
-        ecand_f = (
-            _front(sfpos) & (sfpos == ns_s[:, None] - 1) & alive[:, None]
-        )
-        has_e = ecand_f.any(axis=1)
-        efid = jnp.argmax(ecand_f, axis=1).astype(jnp.int32)
-        ekey = (enq_s * P + spc) * F + efid
-        e_win = arbitrate(has_e, ekey, eject_node[spc], NN, backend=backend)
-        ej_win = ecand_f & e_win[:, None]
-        sfpos = sfpos + ej_win.astype(jnp.int32)
-        tail_ej = ej_win[:, F - 1]
-
-        # VC accounting: header alloc at `to`; the tail flit leaving a stage
-        # frees that stage's VC — both a forward move and a same-cycle
-        # ejection from the final stage can fire for one slot
-        deltas = jnp.concatenate([
-            jnp.where(hdr_win, 1, 0),
-            jnp.where(tail_mv, -1, 0),
-            jnp.where(tail_ej, -1, 0),
-        ]).astype(jnp.int32)
-        slots = jnp.concatenate([
-            vci_to[:, 0], _vci(spc, tail_from), _vci(spc, ns_s - 1),
-        ])
-        vc_used = vc_used + jax.ops.segment_sum(
-            deltas, slots, num_segments=2 * L
-        )
-
-        # slot recycle on full ejection
-        finished = alive & (sfpos[:, F - 1] == ns_s)
-        sp = jnp.where(finished, -1, sp)
-
-        # ---- counters (same events the host sim counts) -----------------
-        n_moves = jnp.sum(mv_win)
-        n_inj = jnp.sum(mv_win & in_ni)
-        n_ej = jnp.sum(ej_win)
-        ctr = ctr + jnp.stack([
-            n_moves, n_moves, n_moves - n_inj + n_ej, n_moves,
-            jnp.sum(move_c), n_inj + n_ej, jnp.sum(finished),
-            jnp.zeros((), jnp.int32),
-        ]).astype(jnp.int32)
-        ctr = ctr.at[_I["slots_hwm"]].max(jnp.sum(alive))
-        return SlotState(sfpos, sp, slot_of, vc_used, ptr, front_slot, crel,
-                         dtime, ctr, ovf), None
-
-    return step
+__all__ = ["CTR", "CycleState", "cycle_core", "init_planes", "run_cycles"]

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import candidate_cost, grid
 from repro.core.partition import ALL_CANDIDATE_IDS, basic_partitions
@@ -382,3 +384,117 @@ def test_dpm_plan_weighted_float_tie_breaks_match_host_greedy():
     cw, rw, chw = np.asarray(cw), np.asarray(rw), np.asarray(chw)
     for p in range(cw.shape[0]):
         np.testing.assert_array_equal(chw[p], _host_greedy(cw[p], rw[p]), p)
+
+
+# ---------------------------------------------------------------------------
+# fused wormhole-cycle kernel (kernels/noc_cycle): ref <-> Pallas parity
+# ---------------------------------------------------------------------------
+def _cycle_fixture(cfg, rate, cycles, seed, algo):
+    """Compile one workload down to the fused engine's operands."""
+    from repro.kernels.noc_cycle import ref as R
+    from repro.noc import synthetic_workload
+    from repro.noc.xsim.compile import (
+        compile_workload,
+        geometry_tables,
+        stack_traffic,
+    )
+
+    wl = synthetic_workload(cfg, rate, cycles, seed=seed)
+    ct = compile_workload(cfg, wl, algo)
+    refm, stacked = stack_traffic([ct])
+    tb = {
+        f: jnp.asarray(stacked[f][0]) for f in R.TABLE_FIELDS
+    }
+    geom = geometry_tables(refm.kind, refm.n, refm.m, cfg.vcs_per_class)
+    params = dict(
+        F=cfg.flits_per_packet, V=cfg.vcs_per_class, BD=cfg.buffer_depth,
+        L=refm.num_links, NN=refm.num_nodes,
+    )
+    C = stacked["child_parent"].shape[1]
+    planes = R.init_planes(
+        refm.num_links, 2 * cfg.vcs_per_class, refm.num_nodes, C
+    )
+    return R, tb, geom, params, planes, stacked["link"].shape[2]
+
+
+CYCLE_TOPOS = [
+    ("mesh", dict(n=4, dest_range=(2, 4))),
+    ("torus", dict(n=4, topology="torus", dest_range=(2, 4))),
+    ("degraded", dict(n=4, dest_range=(2, 4),
+                      broken_links=(((1, 1), (2, 1)),))),
+]
+
+
+@pytest.mark.parametrize(
+    "topo_kw", [c[1] for c in CYCLE_TOPOS], ids=[c[0] for c in CYCLE_TOPOS]
+)
+def test_noc_cycle_pallas_lockstep_state_parity(topo_kw):
+    """The fused kernel must reproduce the jnp reference *per cycle*: every
+    packed state plane bit-equal after each single-cycle chunk, and the
+    packed arrival-event row decoding to the reference arrival tuple."""
+    from repro.noc import NoCConfig
+    from repro.kernels.noc_cycle.noc_cycle import make_chunk_runner
+
+    cfg = NoCConfig(**topo_kw)
+    R, tb, geom, params, planes, S = _cycle_fixture(cfg, 0.06, 30, 5, "DPM")
+    F = params["F"]
+    runner = jax.jit(
+        make_chunk_runner(geom, S=S, Tc=1, interpret=True, **params)
+    )
+    step_r = jax.jit(
+        lambda st, t: R.cycle_core(st, tb, t, geom, **params)
+    )
+    st_r, st_p = planes, planes
+    for t in range(24):
+        st_r, (aval, apid, astage, afid) = step_r(st_r, jnp.int32(t))
+        st_p, ev = runner(st_p, tb, t)
+        for name, a, b in zip(R.CycleState._fields, st_r, st_p):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"plane {name} @ t={t}"
+            )
+        ev_ref = np.where(
+            np.asarray(aval),
+            1 + (np.asarray(apid) * S + np.asarray(astage)) * 4
+            + (np.asarray(afid) == F - 1) * 2 + (np.asarray(afid) == 0),
+            0,
+        )
+        np.testing.assert_array_equal(np.asarray(ev[0]), ev_ref, err_msg=f"ev @ t={t}")
+    assert int(st_r.ctr[0]) > 0  # traffic actually moved
+
+
+@given(st.integers(0, 10**6), st.integers(0, 6), st.integers(0, 2))
+@settings(max_examples=3, deadline=None)
+def test_noc_cycle_pallas_chunked_parity_randomized(seed, ri, ti):
+    """Property: for randomized traffic on mesh/torus/degraded, a chunked
+    fused-kernel run (several cycles per launch) ends in exactly the
+    reference scan's state."""
+    from repro.noc import NoCConfig
+    from repro.kernels.noc_cycle.noc_cycle import make_chunk_runner
+
+    cfg = NoCConfig(**CYCLE_TOPOS[ti][1])
+    rate = 0.02 + 0.01 * ri
+    R, tb, geom, params, planes, S = _cycle_fixture(cfg, rate, 20, seed, "DPM")
+    Tc, chunks = 8, 2
+
+    @jax.jit
+    def ref_end(planes):
+        def body(st, t):
+            st, _ = R.cycle_core(st, tb, t, geom, **params)
+            return st, None
+        st, _ = jax.lax.scan(
+            body, planes, jnp.arange(Tc * chunks, dtype=jnp.int32)
+        )
+        return st
+
+    st_r = ref_end(planes)
+    runner = jax.jit(
+        make_chunk_runner(geom, S=S, Tc=Tc, interpret=True, **params)
+    )
+    st_p = planes
+    for c in range(chunks):
+        st_p, _ = runner(st_p, tb, c * Tc)
+    for name, a, b in zip(R.CycleState._fields, st_r, st_p):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"plane {name} seed={seed} rate={rate} topo={ti}",
+        )

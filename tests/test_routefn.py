@@ -385,3 +385,49 @@ def test_degraded_mesh_parity_wormhole_vs_xsim():
     assert psets == res.delivered_sets(0, 0)
     xlat = float(res.avg_latency(0, 0))
     assert xlat == pytest.approx(pst.avg_latency, rel=0.10)
+
+
+# ---------------------------------------------------------------------------
+# clustered fault regions: router_failure
+# ---------------------------------------------------------------------------
+def test_router_failure_expands_to_incident_links():
+    from repro.core import router_failure
+
+    g = grid(5)
+    # interior router: all four incident links, canonicalized + sorted
+    links = router_failure(g, (2, 2))
+    assert links == (
+        ((1, 2), (2, 2)), ((2, 1), (2, 2)), ((2, 2), (2, 3)),
+        ((2, 2), (3, 2)),
+    )
+    # corner router: two links; edge router: three
+    assert len(router_failure(g, (0, 0))) == 2
+    assert len(router_failure(g, (2, 0))) == 3
+    # multi-node regions merge (shared links deduplicate)
+    region = router_failure(g, (2, 2), (3, 2))
+    assert len(region) == 4 + 4 - 1
+    # torus routers always have four incident links (wrap)
+    assert len(router_failure(torus(4), (0, 0))) == 4
+    with pytest.raises(ValueError):
+        router_failure(g, (9, 9))
+
+
+def test_router_failure_isolates_node_and_detours_around_it():
+    from repro.core import router_failure
+
+    g = grid(5)
+    dead = (2, 2)
+    topo = faulty(g, router_failure(g, dead))
+    # the dead router is unreachable — planning to it raises
+    with pytest.raises(DisconnectedError):
+        plan("DPM", topo, (0, 0), [dead])
+    # everything else routes around the hole, never touching it
+    for algo in ("DPM", "MU"):
+        p = plan(algo, topo, (1, 2), [(3, 2), (2, 1)])
+        for path in p.paths:
+            assert dead not in path.hops
+            for a, b in zip(path.hops, path.hops[1:]):
+                assert b in topo.neighbors(*a)
+    # composes with an existing degraded topology
+    t2 = faulty(topo, router_failure(topo, (0, 4)))
+    assert len(t2.faults) == 4 + 2
