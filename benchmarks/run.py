@@ -19,7 +19,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated module names "
-        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault)",
+        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault,trace)",
     )
     ap.add_argument(
         "--algos",
@@ -46,6 +46,7 @@ def main() -> None:
         partition_quality,
         torus_planner,
         tpu_multicast,
+        trace_replay,
         xsim_sweep,
     )
 
@@ -60,8 +61,16 @@ def main() -> None:
         "dist": dist_collectives.run,
         "xsim": xsim_sweep.run,
         "fault": fault_resilience.run,
+        "trace": trace_replay.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
+    unknown = only - set(suites)
+    if unknown:
+        # a typo'd --only used to run nothing silently; fail loudly instead
+        ap.error(
+            f"unknown suite(s) {sorted(unknown)}; available: "
+            f"{','.join(suites)}"
+        )
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if name not in only:

@@ -32,6 +32,7 @@ weighted Pallas planner kernel (kernels/dpm_cost) consumes.
 from __future__ import annotations
 
 import functools
+import zlib
 from collections import deque
 from dataclasses import dataclass
 
@@ -329,6 +330,14 @@ class FaultAwareProvider(RouteProvider):
       the BFS shortest path. Every step therefore either strictly decreases
       the BFS distance or keeps it while strictly advancing the label, so
       chain walks are loop-free and terminate (DESIGN.md §7).
+
+    Detours *load-balance*: a BFS tree has one arbitrary predecessor per
+    node, so every detour around a fault region funneled through the same
+    few links (the first-expanded ones). ``_bfs_path`` instead walks back
+    through the full set of equal-length predecessors, tie-breaking with a
+    deterministic per-(src, dst) digest — distinct flows spread across the
+    equal-cost detours instead of piling onto one, while every route stays
+    a BFS-shortest path and is reproducible run to run.
     """
 
     name = "fault-aware"
@@ -342,16 +351,28 @@ class FaultAwareProvider(RouteProvider):
 
     @staticmethod
     def _bfs_path(topo: FaultyTopology, src: Coord, dst: Coord) -> list[Coord]:
-        tree = _bfs_from(topo, topo.normalize(*src))
+        src = topo.normalize(*src)
+        tree = _bfs_from(topo, src)
         dst = topo.normalize(*dst)
         if dst not in tree:
             raise DisconnectedError(
                 f"{dst} unreachable from {src} on degraded {topo.kind} "
                 f"({len(topo.faults)} broken links)"
             )
+        # stable digest, NOT hash(): str hashing is salted per process
+        flow = zlib.crc32(repr((src, dst)).encode())
         path = [dst]
-        while path[-1] != topo.normalize(*src):
-            path.append(tree[path[-1]][1])
+        while path[-1] != src:
+            u = path[-1]
+            du = tree[u][0]
+            preds = [
+                v for v in topo.neighbors(*u)
+                if tree.get(v, (du,))[0] == du - 1
+            ]
+            path.append(min(
+                preds,
+                key=lambda v: zlib.crc32(repr((flow, u, v)).encode()),
+            ))
         path.reverse()
         return path
 

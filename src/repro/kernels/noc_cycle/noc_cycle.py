@@ -59,10 +59,13 @@ def make_chunk_runner(geom: dict, *, F: int, V: int, BD: int, L: int,
             st, (aval, apid, astage, afid) = cycle_core(
                 st, tb, t0 + i, gm, **params
             )
+            # tail bit is per-packet: a trace worm may be shorter/longer
+            # than the config default (heterogeneous payloads)
+            nf = tb["flits"][jnp.clip(apid, 0, tb["flits"].shape[0] - 1)]
             ev = jnp.where(
                 aval,
                 1 + ((apid * S + astage) * 4
-                     + (afid == F - 1).astype(jnp.int32) * 2
+                     + (afid == nf - 1).astype(jnp.int32) * 2
                      + (afid == 0).astype(jnp.int32)),
                 0,
             )

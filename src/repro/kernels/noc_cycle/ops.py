@@ -50,17 +50,20 @@ def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
     # (enqueue, pid, fid) age keys separately)
     assert (T + 2) * max(C, 1) < 2**31, "child release keys exceed int32"
     assert P * S * 4 + 1 < 2**31, "arrival events exceed int32"
+    if "flits" not in tr:  # legacy/minimal table dicts: uniform worm length
+        tr = dict(tr)
+        tr["flits"] = jnp.full((P,), F, jnp.int32)
     tb = {f: jnp.asarray(tr[f]) for f in TABLE_FIELDS}
     dslot = jnp.asarray(tr["dslot"], jnp.int32)
     planes0 = init_planes(L, W, NN, C)
     dtime0 = jnp.full((ND + 1,), -1, jnp.int32)
     params = dict(F=F, V=V, BD=BD, L=L, NN=NN)
 
-    def record(dtime, aval, apid, astage, afid, t):
+    def record(dtime, aval, apid, astage, tail, t):
         """The engine's one scatter: tail arrivals at delivery stages."""
         sc = jnp.clip(astage, 0, S - 1)
         ds = dslot[jnp.clip(apid, 0, P - 1), sc]  # -1 = not a delivery
-        hit = aval & (afid == F - 1) & (ds >= 0)
+        hit = aval & tail & (ds >= 0)
         return dtime.at[jnp.where(hit, ds, ND)].set(t, mode="drop")
 
     if backend == "ref":
@@ -69,7 +72,8 @@ def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
             planes, (aval, apid, astage, afid) = cycle_core(
                 planes, tb, t, geom, **params
             )
-            return (planes, record(dtime, aval, apid, astage, afid, t)), None
+            tail = afid == tb["flits"][jnp.clip(apid, 0, P - 1)] - 1
+            return (planes, record(dtime, aval, apid, astage, tail, t)), None
 
         (planes, dtime), _ = jax.lax.scan(
             body, (planes0, dtime0), jnp.arange(T, dtype=jnp.int32)
@@ -86,8 +90,7 @@ def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
             stage, pid = ps % S, ps // S
             aval = flat > 0
             times = t0 + jnp.repeat(jnp.arange(Tc, dtype=jnp.int32), L)
-            return record(dtime, aval, pid, stage,
-                          jnp.where(tail, F - 1, 0), times)
+            return record(dtime, aval, pid, stage, tail, times)
 
         carry = (planes0, dtime0)
         full, rem = divmod(T, chunk)

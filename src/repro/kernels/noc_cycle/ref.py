@@ -62,8 +62,8 @@ _I = {name: i for i, name in enumerate(CTR)}
 
 # table fields cycle_core reads (the kernel passes them as explicit refs)
 TABLE_FIELDS = (
-    "enqueue", "lane", "num_stages", "link", "vcls", "lane_seq", "chl",
-    "child_pid", "child_parent", "child_rs", "child_enq", "watch_link",
+    "enqueue", "lane", "num_stages", "flits", "link", "vcls", "lane_seq",
+    "chl", "child_pid", "child_parent", "child_rs", "child_enq", "watch_link",
 )
 
 
@@ -79,6 +79,8 @@ class CycleState(NamedTuple):
     fkey: jax.Array  # (L, W) int32 — owner's age-key base (enq*P+pid)*F
     fcls: jax.Array  # (L, W) int8 — owner's VC class at the next hop
     ffin: jax.Array  # (L, W) bool — FIFO serves the owner's final stage
+    fnf: jax.Array  # (L, W) int8 — owner's worm length (per-packet flits),
+    #                  cached at header arrival like fkey/ffin
     lpid: jax.Array  # (2NN,) int32
     lsent: jax.Array  # (2NN,) int8
     lptr: jax.Array  # (2NN,) int32
@@ -100,6 +102,7 @@ def init_planes(L: int, W: int, NN: int, C: int) -> CycleState:
         fkey=jnp.zeros((L, W), jnp.int32),
         fcls=jnp.zeros((L, W), jnp.int8),
         ffin=jnp.zeros((L, W), bool),
+        fnf=jnp.ones((L, W), jnp.int8),
         lpid=jnp.full((2 * NN,), -1, jnp.int32),
         lsent=jnp.zeros((2 * NN,), jnp.int8),
         lptr=jnp.zeros((2 * NN,), jnp.int32),
@@ -121,10 +124,11 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     state plus the per-link arrival events ``(aval, apid, astage, afid)``
     the caller turns into delivery times (the one scatter, kept outside).
     """
-    (fowner, fstage, fhead, fcount, fdvc, freq, fkey, fcls, ffin, lpid,
+    (fowner, fstage, fhead, fcount, fdvc, freq, fkey, fcls, ffin, fnf, lpid,
      lsent, lptr, ldvc, crtime, ctaken, inflight, ctr) = state
     enqueue = tb["enqueue"]
     ns = tb["num_stages"]
+    flits_t = tb["flits"]
     link_t = tb["link"]
     vcls_t = tb["vcls"]
     lane_seq = tb["lane_seq"]
@@ -166,7 +170,9 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     lane_ok = jnp.stack(
         [root_ok.reshape(NN, 2)[:, 0], child_ok], axis=1
     ).reshape(2 * NN)
-    need = (lpid < 0) | (lsent >= F)
+    need = (lpid < 0) | (
+        lsent.astype(jnp.int32) >= flits_t[jnp.clip(lpid, 0, P - 1)]
+    )
     got = need & lane_ok
     lpid = jnp.where(got, lane_cand, jnp.where(need, -1, lpid))
     lsent = jnp.where(got, jnp.int8(0), lsent)
@@ -218,7 +224,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     # NI lane candidates: the front worm's next flit targets stage 0
     lp = jnp.clip(lpid, 0, P - 1)
     ls32 = lsent.astype(jnp.int32)
-    lvalid = (lpid >= 0) & (lsent < F)
+    lvalid = (lpid >= 0) & (ls32 < flits_t[lp])
     req_l = jnp.where(lvalid, link_t[lp, 0], -1)  # (2NN,)
     req_lc = jnp.clip(req_l, 0, L - 1)
     key_l = (enqueue[lp] * P + lp) * F + ls32
@@ -283,7 +289,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     # a winning header pins the VC it was granted for its body flits
     fdvc = jnp.where(won_f & is_hdr_f, tvc_f.astype(jnp.int8), fdvc)
     ldvc = jnp.where(won_l & is_hdr_l, tvc_l.astype(jnp.int8), ldvc)
-    dep_tail = won_f & (fhead == F - 1)
+    dep_tail = won_f & (fhead == fnf - 1)
     fhead = fhead + won_f.astype(jnp.int8)
     fcount = fcount - won_f.astype(jnp.int8)
     fowner = jnp.where(dep_tail, -1, fowner)
@@ -303,10 +309,12 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     a_cls = vcls_t[apid, nxtc]
     a_key = (enqueue[apid] * P + apid) * F
     a_fin = astage == a_ns - 1
+    a_nf = flits_t[apid]  # (L,) — the arriving worm's length
     freq = jnp.where(hdr1h, a_req[:, None], freq)
     fkey = jnp.where(hdr1h, a_key[:, None], fkey)
     fcls = jnp.where(hdr1h, a_cls.astype(jnp.int8)[:, None], fcls)
     ffin = jnp.where(hdr1h, a_fin[:, None], ffin)
+    fnf = jnp.where(hdr1h, a_nf.astype(jnp.int8)[:, None], fnf)
 
     # ---- 5. ejection (per node, post-move state) --------------------------
     ecand_f = (fowner >= 0) & (fcount > 0) & ffin
@@ -324,7 +332,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     ewin_n = jnp.min(ek_np, axis=1) < INF
     ewon = ecand & ewin_n[cand_node] & (eport[cand_node] == cand_port)
     ewon_f = ewon[:LW].reshape(L, W)
-    etail = ewon_f & (fhead == F - 1)
+    etail = ewon_f & (fhead == fnf - 1)
     fhead = fhead + ewon_f.astype(jnp.int8)
     fcount = fcount - ewon_f.astype(jnp.int8)
     fowner = jnp.where(etail, -1, fowner)
@@ -352,6 +360,6 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     ])
 
     state = CycleState(fowner, fstage, fhead, fcount, fdvc, freq, fkey,
-                       fcls, ffin, lpid, lsent, lptr, ldvc, crtime, ctaken,
-                       inflight, ctr)
+                       fcls, ffin, fnf, lpid, lsent, lptr, ldvc, crtime,
+                       ctaken, inflight, ctr)
     return state, (aval, apid, astage, afid)

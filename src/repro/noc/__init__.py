@@ -15,6 +15,15 @@ from .traffic import (
     simulate,
     synthetic_workload,
 )
+from .trace import (
+    ReplayResult,
+    Trace,
+    TraceEvent,
+    TracePhase,
+    cross_validate,
+    replay_host,
+    replay_xsim,
+)
 from .xsim import XSimResults, latency_vs_rate_batched, xsimulate
 
 __all__ = [
@@ -22,14 +31,21 @@ __all__ = [
     "EnergyModel",
     "NoCConfig",
     "PARSEC_PROFILES",
+    "ReplayResult",
     "Request",
     "SimStats",
+    "Trace",
+    "TraceEvent",
+    "TracePhase",
     "Workload",
     "WormholeSim",
     "XSimResults",
+    "cross_validate",
     "latency_vs_rate",
     "latency_vs_rate_batched",
     "parsec_workload",
+    "replay_host",
+    "replay_xsim",
     "simulate",
     "synthetic_workload",
     "xsimulate",

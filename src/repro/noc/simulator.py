@@ -47,6 +47,7 @@ class _Pkt:
     enqueue_time: int
     parent: int | None  # global pid; child released when parent delivers at hops[0]
     is_multicast: bool
+    flits: int  # worm length — per-packet (trace payloads vary)
     released: bool = False
     flits_sent: int = 0  # flits that left the source NI queue
     head_stage: int = -1  # highest stage the header has entered (-1: in NI)
@@ -131,20 +132,25 @@ class WormholeSim:
         dests: list[Coord],
         enqueue_time: int,
         cost_model=None,
+        flits: int | None = None,
     ) -> list[int]:
         """Plan one multicast via the algorithm registry and ingest it.
 
         ``algo`` is a registered name or ``RoutingAlgorithm`` instance;
         unknown names raise listing what is registered, and algorithms that
         do not support this simulator's topology kind are rejected before
-        any packet is admitted.
+        any packet is admitted. ``flits`` overrides the per-packet worm
+        length (default ``cfg.flits_per_packet``).
         """
         return self.add_plan(
             _registry_plan(algo, self.g, src, dests, cost_model=cost_model),
             enqueue_time,
+            flits=flits,
         )
 
-    def add_plan(self, plan: MulticastPlan, enqueue_time: int) -> list[int]:
+    def add_plan(
+        self, plan: MulticastPlan, enqueue_time: int, flits: int | None = None
+    ) -> list[int]:
         """Ingest a pre-planned multicast.
 
         On a degraded topology (``cfg.broken_links``) every path is checked
@@ -161,6 +167,9 @@ class WormholeSim:
                             f"plan {plan.algorithm!r} traverses broken link "
                             f"({u}, {v}); replan on the degraded topology"
                         )
+        flits = self.cfg.flits_per_packet if flits is None else int(flits)
+        if flits < 1:
+            raise ValueError(f"packet needs at least one flit (got {flits})")
         base = len(self.packets)
         pids = []
         for path in plan.paths:
@@ -178,6 +187,7 @@ class WormholeSim:
                     enqueue_time,
                     parent,
                     is_multicast=len(plan.dests) > 1,
+                    flits=flits,
                 )
             )
             self._pending.add(pid)
@@ -218,7 +228,7 @@ class WormholeSim:
                 self.stats.latencies.append(lat)
 
     def _maybe_finish(self, p: _Pkt) -> None:
-        if not p.vc_held and p.flits_sent >= self.cfg.flits_per_packet and (
+        if not p.vc_held and p.flits_sent >= p.flits and (
             p.head_stage == p.num_stages - 1
         ):
             if not p.done:
@@ -228,7 +238,6 @@ class WormholeSim:
 
     # ------------------------------------------------------------ main loop
     def run(self, max_cycles: int, drain: bool = True, watchdog: int = 50_000):
-        F = self.cfg.flits_per_packet
         B = self.cfg.buffer_depth
         V = self.cfg.vcs_per_class
         last_progress = self.time
@@ -247,7 +256,7 @@ class WormholeSim:
                     continue
                 pid = q[0]
                 p = self.packets[pid]
-                if p.flits_sent < F:
+                if p.flits_sent < p.flits:
                     link = p.link(0)
                     cand.setdefault(link, []).append(
                         (p.enqueue_time, pid, p.flits_sent, -1)
@@ -295,14 +304,14 @@ class WormholeSim:
                     if from_stage == -1:
                         p.flits_sent += 1
                         self.stats.ni_flits += 1
-                        if p.flits_sent == F:
+                        if p.flits_sent == p.flits:
                             lane0 = (p.hops[0], 1 if p.parent is not None else 0)
                             self.src_queues[lane0].popleft()
                     else:
                         src_vc = p.vc_held[from_stage]
                         self._fifo(p.link(from_stage))[src_vc].popleft()
                         self.stats.buffer_reads += 1
-                        if fid == F - 1:  # tail left from_stage: free its VC
+                        if fid == p.flits - 1:  # tail left from_stage: free its VC
                             self.vc_owner.pop((p.link(from_stage), src_vc), None)
                             del p.vc_held[from_stage]
                     fifos[vc].append((pid, fid, to_stage))
@@ -317,7 +326,7 @@ class WormholeSim:
                         node = p.hops[to_stage + 1]
                         if node not in p.header_times:
                             p.header_times[node] = now
-                    if fid == F - 1:
+                    if fid == p.flits - 1:
                         self._tail_arrived(p, to_stage, now)
                     progressed = True
                     break  # one flit per link per cycle
@@ -342,7 +351,7 @@ class WormholeSim:
                 self.stats.buffer_reads += 1
                 self.stats.ni_flits += 1
                 progressed = True
-                if fid == F - 1:  # tail ejected: packet complete
+                if fid == p.flits - 1:  # tail ejected: packet complete
                     self.vc_owner.pop((link, vc), None)
                     p.vc_held.pop(stage, None)
                     self._maybe_finish(p)

@@ -1,0 +1,229 @@
+"""Dependency-aware trace replay through both NoC simulators.
+
+Phases replay under barrier semantics: phase ``k + 1`` injects only after
+every delivery of phase ``k`` has completed. The host driver realizes the
+barrier literally — one fresh ``WormholeSim`` per phase, run to drain; the
+xsim driver maps phases onto the *workloads* axis of a single
+``xsimulate`` batch (one vmapped device dispatch for the whole trace),
+which encodes the same semantics because batch cells share nothing.
+
+Payload bytes become per-packet worm lengths here:
+``ceil(bytes / flit_bytes)`` flits, clamped to ``[1, max_flits]`` — the
+clamp keeps a multi-KB collective worm from monopolizing every VC on its
+path while preserving the relative cost of control vs payload traffic.
+
+``cross_validate`` runs both drivers and enforces the simulators' parity
+contract on real workload traffic: identical per-packet delivery sets per
+phase, end-to-end completion within the documented 10% latency band.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..config import NoCConfig
+from ..simulator import WormholeSim
+from ..traffic import Request, Workload
+from ...core.topology import make_topology
+from .ir import Trace
+
+DEFAULT_FLIT_BYTES = 16  # link phit width: one flit moves 16 payload bytes
+DEFAULT_MAX_FLITS = 64  # worm-length clamp (int8 xsim planes cap at 127)
+
+
+def flits_for_bytes(
+    nbytes: int,
+    flit_bytes: int = DEFAULT_FLIT_BYTES,
+    max_flits: int = DEFAULT_MAX_FLITS,
+) -> int:
+    """Payload bytes -> worm length in flits, clamped to [1, max_flits]."""
+    if max_flits > 127:
+        raise ValueError(f"max_flits {max_flits} exceeds xsim plane cap 127")
+    return max(1, min(int(max_flits), -(-int(nbytes) // int(flit_bytes))))
+
+
+@dataclass
+class ReplayResult:
+    """Per-phase and end-to-end stats of one trace replay."""
+
+    trace_name: str
+    engine: str  # "host" | "xsim"
+    algo: str
+    phase_names: list[str]
+    phase_cycles: list[int]  # per-phase completion (cycles to last tail)
+    phase_deliveries: list[dict[int, set[int]]]  # pid -> delivered node idxs
+
+    @property
+    def total_cycles(self) -> int:
+        """End-to-end completion under barrier semantics: phases are
+        serialized, so the trace takes the sum of phase durations."""
+        return sum(self.phase_cycles)
+
+    def summary(self) -> dict:
+        return {
+            "trace": self.trace_name,
+            "engine": self.engine,
+            "algo": self.algo,
+            "phases": len(self.phase_names),
+            "total_cycles": self.total_cycles,
+            "phase_cycles": list(self.phase_cycles),
+        }
+
+
+def _check_fits(tr: Trace, topo) -> None:
+    if tr.num_ranks > topo.num_nodes:
+        raise ValueError(
+            f"trace {tr.name!r} has {tr.num_ranks} ranks but the "
+            f"{topo.num_nodes}-node fabric cannot embed them"
+        )
+
+
+def _phase_requests(ph, topo, flit_bytes: int, max_flits: int):
+    """Lower one phase's events to simulator requests (ranks embedded in
+    boustrophedon label order, bytes converted to worm lengths)."""
+    return [
+        Request(
+            time=e.time,
+            src=topo.unlabel(e.src),
+            dests=[topo.unlabel(d) for d in e.dests],
+            flits=flits_for_bytes(e.payload_bytes, flit_bytes, max_flits),
+        )
+        for e in ph.events
+    ]
+
+
+def replay_host(
+    tr: Trace,
+    cfg: NoCConfig,
+    algo: str = "DPM",
+    *,
+    cost_model=None,
+    flit_bytes: int = DEFAULT_FLIT_BYTES,
+    max_flits: int = DEFAULT_MAX_FLITS,
+) -> ReplayResult:
+    """Replay through the flit-level host simulator, one drained
+    ``WormholeSim`` per phase (the literal barrier)."""
+    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    _check_fits(tr, topo)
+    cycles, deliveries = [], []
+    for ph in tr.phases:
+        sim = WormholeSim(cfg)
+        for r in _phase_requests(ph, topo, flit_bytes, max_flits):
+            sim.add_request(
+                algo, r.src, r.dests, r.time, cost_model=cost_model,
+                flits=r.flits,
+            )
+        st = sim.run(ph.span + cfg.drain_grace, drain=True)
+        if st.packets_finished != st.packets_created:
+            raise RuntimeError(
+                f"phase {ph.name!r} did not drain within "
+                f"{ph.span + cfg.drain_grace} cycles "
+                f"({st.packets_finished}/{st.packets_created} finished)"
+            )
+        last = max(
+            (t for p in sim.packets for t in p.delivery_times.values()),
+            default=0,
+        )
+        cycles.append(last + 1)
+        deliveries.append(
+            {p.pid: {topo.idx(c) for c in p.delivery_times}
+             for p in sim.packets}
+        )
+    return ReplayResult(
+        trace_name=tr.name,
+        engine="host",
+        algo=algo,
+        phase_names=[ph.name for ph in tr.phases],
+        phase_cycles=cycles,
+        phase_deliveries=deliveries,
+    )
+
+
+def replay_xsim(
+    tr: Trace,
+    cfg: NoCConfig,
+    algo: str = "DPM",
+    *,
+    cost_model=None,
+    backend: str | None = None,
+    flit_bytes: int = DEFAULT_FLIT_BYTES,
+    max_flits: int = DEFAULT_MAX_FLITS,
+) -> ReplayResult:
+    """Replay through the batched xsim engine: every phase is one cell of
+    the workloads axis, so the whole trace runs as a single vmapped device
+    dispatch — barrier semantics for free, since batch cells are disjoint
+    simulations."""
+    from ..xsim import xsimulate
+
+    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    _check_fits(tr, topo)
+    workloads = [
+        Workload(
+            name=ph.name,
+            requests=_phase_requests(ph, topo, flit_bytes, max_flits),
+            horizon=ph.span + 1,
+        )
+        for ph in tr.phases
+    ]
+    res = xsimulate(
+        cfg, workloads, (algo,), cost_model=cost_model, warmup=0,
+        backend=backend,
+    )
+    cycles, deliveries = [], []
+    for w, ph in enumerate(tr.phases):
+        if not res.all_drained(w, 0):
+            raise RuntimeError(
+                f"phase {ph.name!r} did not drain within {res.cycles} cycles"
+            )
+        b = res._b(w, 0)
+        hit = res.traffic["deliver"][b] & (res.dtime[b] >= 0)
+        last = int(res.dtime[b][hit].max(initial=-1))
+        cycles.append(last + 1)
+        deliveries.append(res.delivered_sets(w, 0))
+    return ReplayResult(
+        trace_name=tr.name,
+        engine="xsim",
+        algo=algo,
+        phase_names=[ph.name for ph in tr.phases],
+        phase_cycles=cycles,
+        phase_deliveries=deliveries,
+    )
+
+
+def cross_validate(
+    tr: Trace,
+    cfg: NoCConfig,
+    algo: str = "DPM",
+    *,
+    cost_model=None,
+    backend: str | None = None,
+    latency_rel: float = 0.10,
+) -> tuple[ReplayResult, ReplayResult]:
+    """Replay through both engines and enforce the parity contract.
+
+    Per phase: identical per-packet delivery sets (the hard contract).
+    End-to-end: completion times within ``latency_rel`` (the engines
+    resolve switch-allocation ties differently, so exact cycle equality
+    is not promised — same band the fig6 parity tests use).
+    """
+    h = replay_host(tr, cfg, algo, cost_model=cost_model)
+    x = replay_xsim(tr, cfg, algo, cost_model=cost_model, backend=backend)
+    for name, hd, xd in zip(h.phase_names, h.phase_deliveries,
+                            x.phase_deliveries):
+        if hd != xd:
+            diff = {
+                p for p in set(hd) | set(xd)
+                if hd.get(p) != xd.get(p)
+            }
+            raise AssertionError(
+                f"delivery sets diverge in phase {name!r} "
+                f"of {tr.name!r}: packets {sorted(diff)}"
+            )
+    ht, xt = h.total_cycles, x.total_cycles
+    if abs(ht - xt) > latency_rel * max(ht, xt):
+        raise AssertionError(
+            f"end-to-end completion diverges on {tr.name!r}: "
+            f"host {ht} vs xsim {xt} cycles (> {latency_rel:.0%})"
+        )
+    return h, x

@@ -25,6 +25,10 @@ class Request:
     time: int
     src: Coord
     dests: list[Coord]
+    # per-packet worm length; None = cfg.flits_per_packet. Trace replays
+    # (noc.trace) carry heterogeneous payloads; synthetic traffic leaves it
+    # unset, so existing workloads stay bit-identical.
+    flits: int | None = None
 
 
 @dataclass
@@ -141,7 +145,9 @@ def simulate(
     drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
     sim = WormholeSim(cfg, measure_window=(warmup, workload.horizon))
     for r in workload.requests:
-        sim.add_request(algo, r.src, r.dests, r.time, cost_model=cost_model)
+        sim.add_request(
+            algo, r.src, r.dests, r.time, cost_model=cost_model, flits=r.flits
+        )
     sim.run(workload.horizon + drain_grace, drain=True)
     return sim.stats
 

@@ -63,6 +63,7 @@ class CompiledTraffic:
     release_stage: np.ndarray  # int32; -1 for roots
     lane: np.ndarray  # int32; node * 2 + is_child
     num_stages: np.ndarray  # int32
+    flits: np.ndarray  # int32; per-packet worm length (cfg default if unset)
     eject_node: np.ndarray  # int32; row-major index of hops[-1]
     valid: np.ndarray  # bool
     # per-stage (P, S)
@@ -120,10 +121,16 @@ def compile_workload(
     (the same contract as ``WormholeSim.add_plan``).
     """
     g = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
-    rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid)
+    rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid, flits)
     for r in workload.requests:
         pl_ = plan(algo, g, r.src, r.dests, cost_model=cost_model)
-        _lower_plan(pl_, r.time, rows)
+        nf = cfg.flits_per_packet
+        rf = getattr(r, "flits", None)
+        if rf is not None:
+            nf = int(rf)
+        if not 1 <= nf <= 127:  # int8 fhead/fcount/lsent planes
+            raise ValueError(f"per-packet flits must be in [1, 127] (got {nf})")
+        _lower_plan(pl_, r.time, rows, nf)
     is_broken = getattr(g, "is_broken", None)
     if is_broken is not None:
         for hops, *_ in rows:
@@ -145,6 +152,7 @@ def compile_workload(
     release_stage = np.full(Pp, -1, np.int32)
     lane = np.zeros(Pp, np.int32)
     num_stages = np.ones(Pp, np.int32)
+    flits = np.full(Pp, cfg.flits_per_packet, np.int32)
     eject_node = np.zeros(Pp, np.int32)
     valid = np.zeros(Pp, bool)
     link = np.zeros((Pp, Sp), np.int32)
@@ -158,15 +166,16 @@ def compile_workload(
     n, m = g.n, g.rows
     flat_uv: list[Coord] = []
     lens = np.zeros(P, np.int64)
-    enq_l, par_l, lane_l, ej_l = [], [], [], []
+    enq_l, par_l, lane_l, ej_l, fl_l = [], [], [], [], []
     del_p: list[int] = []
     del_s: list[int] = []
-    for pid, (hops, deliveries, t, par) in enumerate(rows):
+    for pid, (hops, deliveries, t, par, nf) in enumerate(rows):
         ns = len(hops) - 1
         lens[pid] = ns
         flat_uv.extend(hops)
         enq_l.append(t)
         par_l.append(-1 if par is None else par)
+        fl_l.append(nf)
         x0, y0 = hops[0]
         lane_l.append((y0 * n + x0) * 2 + (0 if par is None else 1))
         xe, ye = hops[-1]
@@ -181,6 +190,7 @@ def compile_workload(
         parent[:P] = par_l
         lane[:P] = lane_l
         num_stages[:P] = lens
+        flits[:P] = fl_l
         eject_node[:P] = ej_l
         valid[:P] = True
         deliver[del_p, del_s] = True
@@ -252,15 +262,18 @@ def compile_workload(
     )
 
     # the (enqueue, pid, fid) age keys must stay strictly below the NOC_INF
-    # sentinel (2**30) so a real candidate always beats the no-candidate pad
-    max_key = (int(enqueue[valid].max(initial=0)) + 1) * Pp * cfg.flits_per_packet
+    # sentinel (2**30) so a real candidate always beats the no-candidate pad;
+    # the key multiplier is the engine's static F = the largest worm length
+    max_f = max(cfg.flits_per_packet, int(flits[valid].max(initial=1)))
+    max_key = (int(enqueue[valid].max(initial=0)) + 1) * Pp * max_f
     assert max_key < 2**30, f"workload too large for int32 age keys ({max_key})"
     return CompiledTraffic(
         n=g.n, m=g.rows, kind=g.kind,
         num_nodes=g.num_nodes, num_links=g.num_nodes * 4,
         horizon=workload.horizon,
         enqueue=enqueue, parent=parent, release_stage=release_stage,
-        lane=lane, num_stages=num_stages, eject_node=eject_node, valid=valid,
+        lane=lane, num_stages=num_stages, flits=flits,
+        eject_node=eject_node, valid=valid,
         link=link, vcls=vcls, deliver=deliver, dslot=dslot, node=node,
         lane_seq=lane_seq, child_ix=child_ix, child_pid=child_pid,
         child_parent=child_parent, child_rs=child_rs, child_enq=child_enq,
@@ -321,7 +334,7 @@ def geometry_tables(kind: str, n: int, m: int, V: int) -> dict[str, np.ndarray]:
     }
 
 
-def _lower_plan(pl_: MulticastPlan, t: int, rows: list) -> None:
+def _lower_plan(pl_: MulticastPlan, t: int, rows: list, flits: int) -> None:
     """Append one row per packet, matching WormholeSim.add_plan semantics."""
     idx_map: list[int | None] = []  # plan-local path index -> global pid
     for path in pl_.paths:
@@ -338,7 +351,7 @@ def _lower_plan(pl_: MulticastPlan, t: int, rows: list) -> None:
         # monotone-segmented plan relay the worm without absorbing a copy
         assert path.hops[0] not in path.deliveries
         idx_map.append(len(rows))
-        rows.append((path.hops, list(path.deliveries), t, par))
+        rows.append((path.hops, list(path.deliveries), t, par, flits))
 
 
 def stack_traffic(
@@ -374,7 +387,8 @@ def stack_traffic(
             num_links=t.num_links, horizon=t.horizon,
             enqueue=pad1(t.enqueue, NEVER), parent=pad1(t.parent, -1),
             release_stage=pad1(t.release_stage, -1), lane=pad1(t.lane, 0),
-            num_stages=pad1(t.num_stages, 1), eject_node=pad1(t.eject_node, 0),
+            num_stages=pad1(t.num_stages, 1), flits=pad1(t.flits, 1),
+            eject_node=pad1(t.eject_node, 0),
             valid=pad1(t.valid, False),
             link=pad2(t.link), vcls=pad2(t.vcls),
             deliver=pad2(t.deliver), dslot=pad2(t.dslot, -1),
@@ -397,7 +411,7 @@ def stack_traffic(
 
     padded = [pad(t) for t in traffics]
     fields = (
-        "enqueue", "parent", "release_stage", "lane", "num_stages",
+        "enqueue", "parent", "release_stage", "lane", "num_stages", "flits",
         "eject_node", "valid", "link", "vcls", "deliver", "dslot", "node",
         "lane_seq", "child_ix", "child_pid", "child_parent", "child_rs",
         "child_enq", "watch_link", "chl",

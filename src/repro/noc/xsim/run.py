@@ -233,10 +233,14 @@ def xsimulate(
     ref, stacked = stack_traffic(traffics)
     T = max(wl.horizon for wl in workloads) + drain_grace
     ND = int(stacked["dslot"].max()) + 1  # flat delivery-slot space
+    # the engine's static F is the largest worm in the batch: it sizes the
+    # age-key multiplier and the BD>=F credit shortcut; per-packet lengths
+    # ride the compiled ``flits`` table
+    F = max(cfg.flits_per_packet, int(stacked["flits"].max()))
     stacked_j = {k: jnp.asarray(v) for k, v in stacked.items()}
     out = _run_sharded(
         stacked_j,
-        T=T, F=cfg.flits_per_packet, V=cfg.vcs_per_class,
+        T=T, F=F, V=cfg.vcs_per_class,
         BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes, ND=ND,
         kind=ref.kind, n=ref.n, m=ref.m, backend=backend,
     )
