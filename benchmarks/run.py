@@ -19,7 +19,8 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated module names "
-        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault,trace)",
+        "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault,trace,"
+        "telemetry)",
     )
     ap.add_argument(
         "--algos",
@@ -44,6 +45,7 @@ def main() -> None:
         fig8_traces,
         kernels_micro,
         partition_quality,
+        telemetry_calibration,
         torus_planner,
         tpu_multicast,
         trace_replay,
@@ -62,6 +64,7 @@ def main() -> None:
         "xsim": xsim_sweep.run,
         "fault": fault_resilience.run,
         "trace": trace_replay.run,
+        "telemetry": telemetry_calibration.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

@@ -48,6 +48,18 @@ def _one_line(name: str, data: dict) -> str:
             f"{len(reps)} workload classes on {data.get('fabric', '?')}; "
             f"DPM matches or beats every baseline on {wins}/{len(reps)}"
         )
+    if name == "telemetry_calibration":
+        cal = data.get("calibration", {})
+        e = data.get("energy_constants_pj", {})
+        return (
+            f"{data.get('mesh', '?')} loop "
+            f"{'converged' if cal.get('converged') else 'DID NOT CONVERGE'}; "
+            f"latency {cal.get('baseline_latency')} -> "
+            f"{cal.get('calibrated_latency')} "
+            f"({cal.get('plans_changed')} plans moved); measured "
+            f"{e.get('measured_per_worm_hop')} pJ/worm-hop vs analytic "
+            f"{e.get('analytic_per_worm_hop')}"
+        )
     # generic fallback: top-level scalar keys tell the story
     keys = [k for k, v in data.items()
             if isinstance(v, (int, float, str)) and k != "notes"][:4]

@@ -13,8 +13,10 @@ reference, validated against this module.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from collections.abc import Mapping
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from .algo import (
     CostModel,
@@ -328,7 +330,40 @@ register_algorithm(
 )
 
 
-@functools.lru_cache(maxsize=200_000)
+class PlanCacheInfo(NamedTuple):
+    """Aggregate plan-cache stats plus the per-(algorithm, cost-model)
+    breakdown (``by_key``: ``(algo, cm) -> {hits, misses, evictions}``;
+    cost-insensitive algorithms key with ``cm = ""`` — they share one entry
+    across models). Field-compatible with ``lru_cache.cache_info()``."""
+
+    hits: int
+    misses: int
+    maxsize: int
+    currsize: int
+    by_key: dict[tuple[str, str], dict[str, int]]
+
+
+# LRU cache over normalized plan keys. A hand-rolled OrderedDict instead of
+# functools.lru_cache so the telemetry layer can attribute hits/misses/
+# evictions to the (algorithm, cost-model) pair inside each key — the
+# signal that says which model's plans are getting recomputed (module-level
+# maxsize so tests can shrink it to exercise eviction).
+_PLAN_CACHE_MAXSIZE = 200_000
+_plan_cache: "OrderedDict[tuple, MulticastPlan]" = OrderedDict()
+_plan_hits = 0
+_plan_misses = 0
+_plan_by_key: dict[tuple[str, str], dict[str, int]] = {}
+
+
+def _key_stats(algo: str, cost_model: str) -> dict[str, int]:
+    st = _plan_by_key.get((algo, cost_model))
+    if st is None:
+        st = _plan_by_key[(algo, cost_model)] = {
+            "hits": 0, "misses": 0, "evictions": 0,
+        }
+    return st
+
+
 def _plan_cached(
     kind: str,
     n: int,
@@ -339,25 +374,50 @@ def _plan_cached(
     src: Coord,
     dests: tuple[Coord, ...],
 ):
+    global _plan_hits, _plan_misses
+    key = (kind, n, m, faults, algo, cost_model, src, dests)
+    cached = _plan_cache.get(key)
+    if cached is not None:
+        _plan_cache.move_to_end(key)
+        _plan_hits += 1
+        _key_stats(algo, cost_model)["hits"] += 1
+        return cached
+    _plan_misses += 1
+    _key_stats(algo, cost_model)["misses"] += 1
     a = get_algorithm(algo)
     topo = make_topology(kind, n, m, faults)
     p = a.plan(
         topo, src, list(dests),
         cost_model=get_cost_model(cost_model or a.default_cost_model),
     )
-    return segment_plan_for_faults(p, topo) if faults else p
+    p = segment_plan_for_faults(p, topo) if faults else p
+    _plan_cache[key] = p
+    while len(_plan_cache) > _PLAN_CACHE_MAXSIZE:
+        evicted, _ = _plan_cache.popitem(last=False)
+        _key_stats(evicted[4], evicted[5])["evictions"] += 1
+    return p
 
 
-on_registry_change(lambda: _plan_cached.cache_clear())
-
-
-def plan_cache_info():
-    """(hits, misses, maxsize, currsize) of the shared plan cache."""
-    return _plan_cached.cache_info()
+def plan_cache_info() -> PlanCacheInfo:
+    """(hits, misses, maxsize, currsize, by_key) of the shared plan cache."""
+    return PlanCacheInfo(
+        _plan_hits,
+        _plan_misses,
+        _PLAN_CACHE_MAXSIZE,
+        len(_plan_cache),
+        {k: dict(v) for k, v in _plan_by_key.items()},
+    )
 
 
 def plan_cache_clear() -> None:
-    _plan_cached.cache_clear()
+    global _plan_hits, _plan_misses
+    _plan_cache.clear()
+    _plan_by_key.clear()
+    _plan_hits = 0
+    _plan_misses = 0
+
+
+on_registry_change(plan_cache_clear)
 
 
 def plan(

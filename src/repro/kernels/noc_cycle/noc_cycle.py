@@ -34,10 +34,11 @@ _GEOM_FIELDS = ("node_ports", "cand_node", "cand_port")
 
 
 def make_chunk_runner(geom: dict, *, F: int, V: int, BD: int, L: int,
-                      NN: int, S: int, Tc: int, interpret: bool):
+                      NN: int, S: int, Tc: int, interpret: bool,
+                      EPL: int = 1 << 30):
     """Build ``run(planes, tb, t0) -> (planes', ev[Tc, L])`` for one chunk
     length. ``t0`` is the absolute cycle of the chunk's first iteration."""
-    params = dict(F=F, V=V, BD=BD, L=L, NN=NN)
+    params = dict(F=F, V=V, BD=BD, L=L, NN=NN, EPL=EPL)
 
     n_in = _NPLANES + len(TABLE_FIELDS) + len(_GEOM_FIELDS) + 1
 

@@ -32,16 +32,20 @@ __all__ = [
 
 def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
                L: int, NN: int, ND: int, backend: str,
-               chunk: int = 32) -> dict:
+               chunk: int = 32, epoch_len: int | None = None) -> dict:
     """Run ``T`` cycles over one compiled-traffic tensor dict ``tr``.
 
-    Returns ``{"dtime": (ND + 1,), "ctr": (len(CTR),), "crel": (C,)}`` —
-    ``dtime`` is the *flat* delivery-time array indexed by the compiler's
-    ``dslot`` table (slot ``ND`` is the discard slot); the runner rebuilds
-    the (P, S) view. Carrying only the sparse delivery slots through the
-    scan keeps the per-cycle state small — the dense (P, S) plane would
-    dominate the carry at scale. vmap/pmap-safe: fixed shapes, no host
-    callbacks, all backends.
+    Returns ``{"dtime": (ND + 1,), "ctr": (len(CTR),), "crel": (C,),
+    "lutil": (E, L), "rconf": (E, NN)}`` — ``dtime`` is the *flat*
+    delivery-time array indexed by the compiler's ``dslot`` table (slot
+    ``ND`` is the discard slot); the runner rebuilds the (P, S) view.
+    Carrying only the sparse delivery slots through the scan keeps the
+    per-cycle state small — the dense (P, S) plane would dominate the
+    carry at scale. ``lutil``/``rconf`` are the telemetry planes
+    (per-epoch per-link flit traversals / per-router arbitration
+    conflicts) bucketed on ``cycle // epoch_len`` with ``E =
+    ceil(T / epoch_len)`` (``epoch_len=None``: one epoch spanning the
+    run). vmap/pmap-safe: fixed shapes, no host callbacks, all backends.
     """
     P, S = tr["link"].shape
     C = tr["child_parent"].shape[0]
@@ -55,9 +59,12 @@ def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
         tr["flits"] = jnp.full((P,), F, jnp.int32)
     tb = {f: jnp.asarray(tr[f]) for f in TABLE_FIELDS}
     dslot = jnp.asarray(tr["dslot"], jnp.int32)
-    planes0 = init_planes(L, W, NN, C)
+    EPL = T if epoch_len is None else int(epoch_len)
+    EPL = max(EPL, 1)
+    E = max(1, -(-T // EPL))
+    planes0 = init_planes(L, W, NN, C, E)
     dtime0 = jnp.full((ND + 1,), -1, jnp.int32)
-    params = dict(F=F, V=V, BD=BD, L=L, NN=NN)
+    params = dict(F=F, V=V, BD=BD, L=L, NN=NN, EPL=EPL)
 
     def record(dtime, aval, apid, astage, tail, t):
         """The engine's one scatter: tail arrivals at delivery stages."""
@@ -117,4 +124,7 @@ def run_cycles(tr: dict, geom: dict, *, T: int, F: int, V: int, BD: int,
         planes, dtime = carry
 
     crel = (planes.crtime >= 0) & (planes.crtime < T)
-    return {"dtime": dtime, "ctr": planes.ctr, "crel": crel}
+    return {
+        "dtime": dtime, "ctr": planes.ctr, "crel": crel,
+        "lutil": planes.lutil, "rconf": planes.rconf,
+    }

@@ -87,11 +87,15 @@ class CycleState(NamedTuple):
     ldvc: jax.Array  # (2NN,) int8 — lane-front worm's VC at its first link
     crtime: jax.Array  # (C,) int32, -1 = not yet releasable
     ctaken: jax.Array  # (C,) bool — consumed by its lane front
+    lutil: jax.Array  # (E, L) int32 — per-epoch per-link flit traversals
+    #                  (telemetry; epoch = min(t // EPL, E-1), DESIGN.md §10)
+    rconf: jax.Array  # (E, NN) int32 — per-epoch per-router arbitration
+    #                  conflicts (losing requests across the 4 output links)
     inflight: jax.Array  # () int32 — worms between lane-front and finish
     ctr: jax.Array  # (len(CTR),) int32
 
 
-def init_planes(L: int, W: int, NN: int, C: int) -> CycleState:
+def init_planes(L: int, W: int, NN: int, C: int, E: int = 1) -> CycleState:
     return CycleState(
         fowner=jnp.full((L, W), -1, jnp.int32),
         fstage=jnp.zeros((L, W), jnp.int16),
@@ -109,13 +113,16 @@ def init_planes(L: int, W: int, NN: int, C: int) -> CycleState:
         ldvc=jnp.zeros((2 * NN,), jnp.int8),
         crtime=jnp.full((C,), -1, jnp.int32),
         ctaken=jnp.zeros((C,), bool),
+        lutil=jnp.zeros((E, L), jnp.int32),
+        rconf=jnp.zeros((E, NN), jnp.int32),
         inflight=jnp.zeros((), jnp.int32),
         ctr=jnp.zeros((len(CTR),), jnp.int32),
     )
 
 
 def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
-               F: int, V: int, BD: int, L: int, NN: int):
+               F: int, V: int, BD: int, L: int, NN: int,
+               EPL: int = 1 << 30):
     """One wormhole cycle. Pure jnp, no scatters — runs under lax.scan (ref
     backend) and inside the Pallas kernel's fori_loop unchanged.
 
@@ -125,7 +132,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     the caller turns into delivery times (the one scatter, kept outside).
     """
     (fowner, fstage, fhead, fcount, fdvc, freq, fkey, fcls, ffin, fnf, lpid,
-     lsent, lptr, ldvc, crtime, ctaken, inflight, ctr) = state
+     lsent, lptr, ldvc, crtime, ctaken, lutil, rconf, inflight, ctr) = state
     enqueue = tb["enqueue"]
     ns = tb["num_stages"]
     flits_t = tb["flits"]
@@ -359,7 +366,24 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
         jnp.sum(req >= 0, dtype=jnp.int32), n_inj + n_ej, finished, zero,
     ])
 
+    # ---- 8. telemetry planes (epoch-bucketed, DESIGN.md §10) --------------
+    # one-hot epoch accumulate (no dynamic scatter — Mosaic-safe and
+    # bit-identical across backends). lutil decomposes flit_link_traversals
+    # per directed link; rconf counts losing requests per router — the same
+    # candidate sets the arbitrations counter tallies, minus the winners.
+    E = lutil.shape[0]
+    eh = (
+        jnp.arange(E, dtype=jnp.int32) == jnp.minimum(t // EPL, E - 1)
+    ).astype(jnp.int32)  # (E,)
+    lutil = lutil + eh[:, None] * aval.astype(jnp.int32)[None, :]
+    nreq = jnp.sum(
+        (req_np[:, None, :] == out_link[:, :, None]).astype(jnp.int32),
+        axis=2,
+    )  # (NN, 4) requests per output link, admissible or not (host parity)
+    conf_n = jnp.sum(jnp.maximum(nreq - 1, 0), axis=1)  # (NN,)
+    rconf = rconf + eh[:, None] * conf_n[None, :]
+
     state = CycleState(fowner, fstage, fhead, fcount, fdvc, freq, fkey,
                        fcls, ffin, fnf, lpid, lsent, lptr, ldvc, crtime,
-                       ctaken, inflight, ctr)
+                       ctaken, lutil, rconf, inflight, ctr)
     return state, (aval, apid, astage, afid)

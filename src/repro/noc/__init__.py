@@ -6,6 +6,17 @@ vectorized ``noc.xsim`` scan/vmap engine for batched sweeps (DESIGN.md §5).
 """
 from .config import DEST_RANGES, EnergyModel, NoCConfig
 from .simulator import SimStats, WormholeSim
+from .telemetry import (
+    CalibrationResult,
+    LatencyHistogram,
+    MeasuredContentionCost,
+    MeasuredEnergyCost,
+    Telemetry,
+    calibrate_cost_model,
+    fit_energy_cost,
+    link_coords,
+    link_index,
+)
 from .traffic import (
     PARSEC_PROFILES,
     Request,
@@ -21,28 +32,39 @@ from .trace import (
     TraceEvent,
     TracePhase,
     cross_validate,
+    export_timeline,
     replay_host,
     replay_xsim,
 )
 from .xsim import XSimResults, latency_vs_rate_batched, xsimulate
 
 __all__ = [
+    "CalibrationResult",
     "DEST_RANGES",
     "EnergyModel",
+    "LatencyHistogram",
+    "MeasuredContentionCost",
+    "MeasuredEnergyCost",
     "NoCConfig",
     "PARSEC_PROFILES",
     "ReplayResult",
     "Request",
     "SimStats",
+    "Telemetry",
     "Trace",
     "TraceEvent",
     "TracePhase",
     "Workload",
     "WormholeSim",
     "XSimResults",
+    "calibrate_cost_model",
     "cross_validate",
+    "export_timeline",
+    "fit_energy_cost",
     "latency_vs_rate",
     "latency_vs_rate_batched",
+    "link_coords",
+    "link_index",
     "parsec_workload",
     "replay_host",
     "replay_xsim",

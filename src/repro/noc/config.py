@@ -43,6 +43,10 @@ class NoCConfig:
     # packets deliver.
     warmup: int = 200
     drain_grace: int = 3000
+    # telemetry time-bucket width (cycles) shared by both engines: the host
+    # sim's Telemetry epochs and xsim's per-link utilization / per-router
+    # conflict planes both bucket on cycle // epoch_len (DESIGN.md §10)
+    epoch_len: int = 128
     # xsim cycle-engine backend: None/"auto" picks "ref" on CPU and
     # "pallas" (the fused chunk kernel) on TPU/GPU; "pallas_interpret"
     # runs the kernel path on CPU for validation. An explicit ``backend=``

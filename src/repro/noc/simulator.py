@@ -34,6 +34,7 @@ from ..core.planner import MulticastPlan
 from ..core.planner import plan as _registry_plan
 from ..core.topology import make_topology
 from .config import NoCConfig
+from .telemetry import Telemetry, link_index
 
 HIGH, LOW = 0, 1
 Link = tuple[Coord, Coord]
@@ -77,6 +78,12 @@ class SimStats:
     packets_created: int = 0
     packets_finished: int = 0
     max_srcq: int = 0
+    # structured per-link/per-VC/per-epoch view of the same events (the host
+    # sim always attaches one; the flat aggregates above stay the public API
+    # and the conservation tests pin the two views equal — DESIGN.md §10)
+    telemetry: Telemetry | None = field(
+        default=None, compare=False, repr=False
+    )
 
     @property
     def avg_latency(self) -> float:
@@ -107,7 +114,12 @@ class WormholeSim:
         self.fifos: dict[Link, list[deque]] = {}  # link -> per-VC FIFOs
         self.vc_owner: dict[tuple[Link, int], int] = {}
         self.src_queues: dict[tuple[Coord, int], deque] = {}
-        self.stats = SimStats()
+        self.stats = SimStats(
+            telemetry=Telemetry(
+                self.g.num_nodes, cfg.vcs_per_class, cfg.epoch_len
+            )
+        )
+        self._lids: dict[Link, int] = {}  # link -> directed-link id memo
         self.time = 0
         self._measure = measure_window
         self._pending: set[int] = set()
@@ -123,6 +135,12 @@ class WormholeSim:
 
     def _class(self, link: Link) -> int:
         return HIGH if self.g.label(*link[1]) > self.g.label(*link[0]) else LOW
+
+    def _lid(self, link: Link) -> int:
+        lid = self._lids.get(link)
+        if lid is None:
+            lid = self._lids[link] = link_index(self.g, *link)
+        return lid
 
     # ----------------------------------------------------------- admission
     def add_request(
@@ -226,6 +244,7 @@ class WormholeSim:
                 self._measure[0] <= p.enqueue_time < self._measure[1]
             ):
                 self.stats.latencies.append(lat)
+                self.stats.telemetry.latency(lat, now)
 
     def _maybe_finish(self, p: _Pkt) -> None:
         if not p.vc_held and p.flits_sent >= p.flits and (
@@ -273,15 +292,19 @@ class WormholeSim:
                     cand.setdefault(nxt, []).append((p.enqueue_time, pid, fid, stage))
 
             # ---- 2. per-link arbitration: one flit crosses each link ----
+            tm = self.stats.telemetry
             for link, reqs in cand.items():
                 reqs.sort(key=lambda c: (c[0], c[1], c[2]))
                 self.stats.arbitrations += len(reqs)
+                lid = self._lid(link)
+                if len(reqs) > 1:  # everyone but one winner loses this cycle
+                    tm.conflicts(lid, len(reqs) - 1)
                 fifos = self._fifo(link)
                 for age, pid, fid, from_stage in reqs:
                     p = self.packets[pid]
                     to_stage = from_stage + 1
+                    cls = self._class(link)
                     if fid == 0:  # header: allocate a VC of the hop's class
-                        cls = self._class(link)
                         lo = 0 if cls == HIGH else V
                         vc = next(
                             (
@@ -292,6 +315,7 @@ class WormholeSim:
                             None,
                         )
                         if vc is None:
+                            tm.stall(lid)  # no free VC in the hop's class
                             continue
                         self.vc_owner[(link, vc)] = pid
                         p.vc_held[to_stage] = vc
@@ -299,6 +323,7 @@ class WormholeSim:
                     else:
                         vc = p.vc_held.get(to_stage)
                         if vc is None or len(fifos[vc]) >= B:
+                            tm.stall(lid)  # no credit (or header still queued)
                             continue  # header not yet there / no credit
                     # move the flit
                     if from_stage == -1:
@@ -318,6 +343,8 @@ class WormholeSim:
                     self.stats.buffer_writes += 1
                     self.stats.xbar_traversals += 1
                     self.stats.flit_link_traversals += 1
+                    tm.flit(lid, cls, now)
+                    tm.occupancy(lid, vc, len(fifos[vc]))
                     if fid == 0:
                         # first header arrival per node: releases relayed
                         # children (DPM MU re-injection and the degraded-

@@ -24,6 +24,7 @@ from .replay import (
     DEFAULT_MAX_FLITS,
     ReplayResult,
     cross_validate,
+    export_timeline,
     flits_for_bytes,
     replay_host,
     replay_xsim,
@@ -40,6 +41,7 @@ __all__ = [
     "compressed_allreduce_trace",
     "cross_validate",
     "ep_dispatch_trace",
+    "export_timeline",
     "flits_for_bytes",
     "from_hlo",
     "from_schedule",

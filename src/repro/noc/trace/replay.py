@@ -18,7 +18,9 @@ phase, end-to-end completion within the documented 10% latency band.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
+import json
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -30,6 +32,7 @@ from .ir import Trace
 
 DEFAULT_FLIT_BYTES = 16  # link phit width: one flit moves 16 payload bytes
 DEFAULT_MAX_FLITS = 64  # worm-length clamp (int8 xsim planes cap at 127)
+STRAGGLER_TOP_K = 5  # slowest deliveries reported per phase timeline
 
 
 def flits_for_bytes(
@@ -53,6 +56,13 @@ class ReplayResult:
     phase_names: list[str]
     phase_cycles: list[int]  # per-phase completion (cycles to last tail)
     phase_deliveries: list[dict[int, set[int]]]  # pid -> delivered node idxs
+    # telemetry timeline (DESIGN.md §10): per-phase (L,) directed-link flit
+    # counts, top-K slowest deliveries, and the fault set each phase ran
+    # under (None = the config's own set)
+    fabric: tuple[int, int] | None = None  # (n, rows) for heatmap reshape
+    phase_link_util: list[np.ndarray] = field(default_factory=list)
+    phase_stragglers: list[list[dict]] = field(default_factory=list)
+    phase_faults: list[tuple | None] = field(default_factory=list)
 
     @property
     def total_cycles(self) -> int:
@@ -69,6 +79,98 @@ class ReplayResult:
             "total_cycles": self.total_cycles,
             "phase_cycles": list(self.phase_cycles),
         }
+
+    def timeline(self) -> dict:
+        """JSON-ready per-phase telemetry timeline: phase cycles, per-node
+        link heatmaps, peak-link pressure, stragglers, and the fault set in
+        force — the artifact ``summarize_repro.py`` renders and CI uploads.
+        """
+        n, rows = self.fabric if self.fabric else (0, 0)
+        phases = []
+        for i, name in enumerate(self.phase_names):
+            util = (
+                self.phase_link_util[i]
+                if i < len(self.phase_link_util) else None
+            )
+            entry = {
+                "name": name,
+                "cycles": int(self.phase_cycles[i]),
+                "deliveries": int(
+                    sum(len(s) for s in self.phase_deliveries[i].values())
+                ),
+                "broken_links": (
+                    None if i >= len(self.phase_faults)
+                    or self.phase_faults[i] is None
+                    else [list(map(list, l)) for l in self.phase_faults[i]]
+                ),
+                "stragglers": (
+                    self.phase_stragglers[i]
+                    if i < len(self.phase_stragglers) else []
+                ),
+            }
+            if util is not None and n:
+                node_flits = util.reshape(rows * n, 4).sum(axis=1)
+                entry["max_link_flits"] = int(util.max(initial=0))
+                entry["total_flits"] = int(util.sum())
+                entry["link_heatmap"] = (
+                    node_flits.reshape(rows, n).tolist()
+                )
+            phases.append(entry)
+        return {
+            "trace": self.trace_name,
+            "engine": self.engine,
+            "algo": self.algo,
+            "fabric": {"n": n, "rows": rows},
+            "total_cycles": self.total_cycles,
+            "phases": phases,
+        }
+
+
+def export_timeline(result: ReplayResult, path) -> dict:
+    """Write ``result.timeline()`` as JSON; returns the dict written."""
+    tl = result.timeline()
+    with open(path, "w") as f:
+        json.dump(tl, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return tl
+
+
+def _resolve_phase_faults(
+    tr: Trace, phase_broken_links
+) -> list[tuple | None]:
+    """Normalize a per-phase broken-links override into one entry per phase.
+
+    Keys may be phase indices or names; an override stays in force for
+    every later phase until the next override (a link that dies mid-trace
+    stays dead — pass ``()`` at a later phase to model a repair). ``None``
+    entries mean "the config's own fault set"."""
+    per_phase: list[tuple | None] = [None] * len(tr.phases)
+    if not phase_broken_links:
+        return per_phase
+    names = [ph.name for ph in tr.phases]
+    by_idx: dict[int, tuple] = {}
+    for k, v in phase_broken_links.items():
+        if isinstance(k, str):
+            if k not in names:
+                raise KeyError(
+                    f"unknown phase {k!r} in phase_broken_links; trace "
+                    f"{tr.name!r} has phases: {', '.join(names)}"
+                )
+            i = names.index(k)
+        else:
+            i = int(k)
+            if not 0 <= i < len(names):
+                raise IndexError(
+                    f"phase index {i} out of range for trace {tr.name!r} "
+                    f"({len(names)} phases)"
+                )
+        by_idx[i] = tuple(tuple(map(tuple, link)) for link in v)
+    current: tuple | None = None
+    for i in range(len(names)):
+        if i in by_idx:
+            current = by_idx[i]
+        per_phase[i] = current
+    return per_phase
 
 
 def _check_fits(tr: Trace, topo) -> None:
@@ -101,14 +203,30 @@ def replay_host(
     cost_model=None,
     flit_bytes: int = DEFAULT_FLIT_BYTES,
     max_flits: int = DEFAULT_MAX_FLITS,
+    phase_broken_links: dict | None = None,
 ) -> ReplayResult:
     """Replay through the flit-level host simulator, one drained
-    ``WormholeSim`` per phase (the literal barrier)."""
+    ``WormholeSim`` per phase (the literal barrier).
+
+    ``phase_broken_links`` injects mid-run link failures: a mapping from
+    phase index/name to a broken-link set that overrides
+    ``cfg.broken_links`` from that phase onward (``_resolve_phase_faults``)
+    — each affected phase plans and runs on its own degraded topology, and
+    the telemetry timeline shows the degradation step."""
     topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
     _check_fits(tr, topo)
+    faults = _resolve_phase_faults(tr, phase_broken_links)
     cycles, deliveries = [], []
-    for ph in tr.phases:
-        sim = WormholeSim(cfg)
+    link_util, stragglers = [], []
+    for ph, flt in zip(tr.phases, faults):
+        pcfg = (
+            cfg if flt is None
+            else dataclasses.replace(cfg, broken_links=flt)
+        )
+        ptopo = make_topology(
+            pcfg.topology, pcfg.n, pcfg.m, pcfg.broken_links
+        )
+        sim = WormholeSim(pcfg)
         for r in _phase_requests(ph, topo, flit_bytes, max_flits):
             sim.add_request(
                 algo, r.src, r.dests, r.time, cost_model=cost_model,
@@ -127,8 +245,21 @@ def replay_host(
         )
         cycles.append(last + 1)
         deliveries.append(
-            {p.pid: {topo.idx(c) for c in p.delivery_times}
+            {p.pid: {ptopo.idx(c) for c in p.delivery_times}
              for p in sim.packets}
+        )
+        link_util.append(st.telemetry.link_flits.copy())
+        lats = sorted(
+            (
+                (t - p.enqueue_time, p.pid, ptopo.idx(c))
+                for p in sim.packets
+                for c, t in p.delivery_times.items()
+            ),
+            reverse=True,
+        )[:STRAGGLER_TOP_K]
+        stragglers.append(
+            [{"pid": pid, "node": node, "latency": int(lat)}
+             for lat, pid, node in lats]
         )
     return ReplayResult(
         trace_name=tr.name,
@@ -137,6 +268,10 @@ def replay_host(
         phase_names=[ph.name for ph in tr.phases],
         phase_cycles=cycles,
         phase_deliveries=deliveries,
+        fabric=(cfg.n, cfg.rows),
+        phase_link_util=link_util,
+        phase_stragglers=stragglers,
+        phase_faults=faults,
     )
 
 
@@ -149,15 +284,19 @@ def replay_xsim(
     backend: str | None = None,
     flit_bytes: int = DEFAULT_FLIT_BYTES,
     max_flits: int = DEFAULT_MAX_FLITS,
+    phase_broken_links: dict | None = None,
 ) -> ReplayResult:
     """Replay through the batched xsim engine: every phase is one cell of
     the workloads axis, so the whole trace runs as a single vmapped device
     dispatch — barrier semantics for free, since batch cells are disjoint
-    simulations."""
+    simulations. ``phase_broken_links`` (same semantics as
+    ``replay_host``) rides ``xsimulate``'s per-workload fault override, so
+    a mid-trace link failure still runs in the one batched dispatch."""
     from ..xsim import xsimulate
 
     topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
     _check_fits(tr, topo)
+    faults = _resolve_phase_faults(tr, phase_broken_links)
     workloads = [
         Workload(
             name=ph.name,
@@ -169,8 +308,12 @@ def replay_xsim(
     res = xsimulate(
         cfg, workloads, (algo,), cost_model=cost_model, warmup=0,
         backend=backend,
+        broken_links_per_workload=(
+            None if phase_broken_links is None else faults
+        ),
     )
     cycles, deliveries = [], []
+    link_util, stragglers = [], []
     for w, ph in enumerate(tr.phases):
         if not res.all_drained(w, 0):
             raise RuntimeError(
@@ -181,6 +324,21 @@ def replay_xsim(
         last = int(res.dtime[b][hit].max(initial=-1))
         cycles.append(last + 1)
         deliveries.append(res.delivered_sets(w, 0))
+        link_util.append(res.link_utilization(w, 0))
+        enq = res.traffic["enqueue"][b]
+        lat = res.dtime[b] - enq[:, None]
+        pidx, sidx = np.nonzero(hit)
+        order = np.argsort(lat[pidx, sidx])[::-1][:STRAGGLER_TOP_K]
+        stragglers.append(
+            [
+                {
+                    "pid": int(pidx[i]),
+                    "node": int(res.traffic["node"][b][pidx[i], sidx[i]]),
+                    "latency": int(lat[pidx[i], sidx[i]]),
+                }
+                for i in order
+            ]
+        )
     return ReplayResult(
         trace_name=tr.name,
         engine="xsim",
@@ -188,6 +346,10 @@ def replay_xsim(
         phase_names=[ph.name for ph in tr.phases],
         phase_cycles=cycles,
         phase_deliveries=deliveries,
+        fabric=(cfg.n, cfg.rows),
+        phase_link_util=link_util,
+        phase_stragglers=stragglers,
+        phase_faults=faults,
     )
 
 
@@ -199,6 +361,7 @@ def cross_validate(
     cost_model=None,
     backend: str | None = None,
     latency_rel: float = 0.10,
+    phase_broken_links: dict | None = None,
 ) -> tuple[ReplayResult, ReplayResult]:
     """Replay through both engines and enforce the parity contract.
 
@@ -207,8 +370,14 @@ def cross_validate(
     resolve switch-allocation ties differently, so exact cycle equality
     is not promised — same band the fig6 parity tests use).
     """
-    h = replay_host(tr, cfg, algo, cost_model=cost_model)
-    x = replay_xsim(tr, cfg, algo, cost_model=cost_model, backend=backend)
+    h = replay_host(
+        tr, cfg, algo, cost_model=cost_model,
+        phase_broken_links=phase_broken_links,
+    )
+    x = replay_xsim(
+        tr, cfg, algo, cost_model=cost_model, backend=backend,
+        phase_broken_links=phase_broken_links,
+    )
     for name, hd, xd in zip(h.phase_names, h.phase_deliveries,
                             x.phase_deliveries):
         if hd != xd:

@@ -18,6 +18,7 @@ injection rate or backlog, and the old overflow/regrow loop is gone.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass
@@ -41,24 +42,28 @@ from .step import CTR, run_cycles
 
 
 def _run_one(tr: dict, T: int, F: int, V: int, BD: int, L: int, NN: int,
-             ND: int, kind: str, n: int, m: int, backend: str):
+             ND: int, kind: str, n: int, m: int, backend: str,
+             epoch_len: int | None = None):
     geom = geometry_tables(kind, n, m, V)
     return run_cycles(
-        tr, geom, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, backend=backend
+        tr, geom, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, backend=backend,
+        epoch_len=epoch_len,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "T", "F", "V", "BD", "L", "NN", "ND", "kind", "n", "m", "backend"
+        "T", "F", "V", "BD", "L", "NN", "ND", "kind", "n", "m", "backend",
+        "epoch_len",
     ),
 )
 def _run_batch(stacked: dict, T: int, F: int, V: int, BD: int, L: int,
-               NN: int, ND: int, kind: str, n: int, m: int, backend: str):
+               NN: int, ND: int, kind: str, n: int, m: int, backend: str,
+               epoch_len: int):
     fn = functools.partial(
         _run_one, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, kind=kind, n=n,
-        m=m, backend=backend,
+        m=m, backend=backend, epoch_len=epoch_len,
     )
     return jax.vmap(fn)(stacked)
 
@@ -105,6 +110,9 @@ class XSimResults:
     ctr: np.ndarray  # (B, len(CTR)) int32
     crel: np.ndarray  # (B, C) bool
     wall_s: float  # host compile + device execute, seconds
+    epoch_len: int = 0  # telemetry bucket width (cycles)
+    lutil: np.ndarray | None = None  # (B, E, L) per-epoch link flits
+    rconf: np.ndarray | None = None  # (B, E, NN) per-epoch router conflicts
 
     def _b(self, w: int, a: int) -> int:
         return w * len(self.algos) + a
@@ -167,6 +175,29 @@ class XSimResults:
         structural ``slots`` capacity the sweep actually used)."""
         return int(self.ctr[:, CTR.index("slots_hwm")].max())
 
+    def link_utilization(self, w: int, a: int,
+                         epoch: int | None = None) -> np.ndarray:
+        """(L,) per-directed-link flit traversals for one grid cell — the
+        conserved-event decomposition of ``flit_link_traversals``, exactly
+        matching the host sim's ``Telemetry.link_flits`` when delivery sets
+        match. ``epoch`` selects one ``epoch_len``-cycle bucket; default
+        sums the run."""
+        planes = self.lutil[self._b(w, a)]
+        return planes.sum(axis=0) if epoch is None else planes[epoch]
+
+    def router_conflicts(self, w: int, a: int,
+                         epoch: int | None = None) -> np.ndarray:
+        """(NN,) per-router losing arbitration requests (see ``lutil``
+        semantics for the ``epoch`` argument)."""
+        planes = self.rconf[self._b(w, a)]
+        return planes.sum(axis=0) if epoch is None else planes[epoch]
+
+    def link_heatmap(self, w: int, a: int) -> np.ndarray:
+        """(rows, n, 4) per-node outgoing-link flit counts (rendering)."""
+        return self.link_utilization(w, a).reshape(
+            self.cfg.rows, self.cfg.n, 4
+        )
+
     def stats(self, w: int, a: int) -> SimStats:
         b = self._b(w, a)
         st = SimStats(latencies=sorted(self.latencies(w, a)))
@@ -196,6 +227,8 @@ def xsimulate(
     slots: int | None = None,
     pad_packets: int | None = None,
     pad_stages: int | None = None,
+    epoch_len: int | None = None,
+    broken_links_per_workload: list | None = None,
 ) -> XSimResults:
     """Simulate every (workload, algo) pair in one vmapped device dispatch.
 
@@ -206,6 +239,12 @@ def xsimulate(
     ``backend`` (or ``cfg.xsim_backend``) selects the cycle engine; see
     ``step.py``. ``slots`` is accepted for backwards compatibility and
     ignored — the packed-plane engine has no slot pool to size.
+    ``epoch_len`` (default ``cfg.epoch_len``) buckets the telemetry planes.
+    ``broken_links_per_workload`` overrides ``cfg.broken_links`` per
+    workload (entries may be None = use the config's set) — routes are
+    planned on each workload's degraded topology at compile time while the
+    whole grid still runs as one batch (the engine itself is
+    fault-agnostic; trace replay uses this for mid-run link failures).
     """
     del slots  # legacy slot-pool hint: capacity is structural now
     topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
@@ -214,6 +253,14 @@ def xsimulate(
     resolved = [get_algorithm(a) for a in algos]
     warmup = cfg.warmup if warmup is None else warmup
     drain_grace = cfg.drain_grace if drain_grace is None else drain_grace
+    epoch_len = cfg.epoch_len if epoch_len is None else int(epoch_len)
+    if broken_links_per_workload is not None and len(
+        broken_links_per_workload
+    ) != len(workloads):
+        raise ValueError(
+            "broken_links_per_workload needs one entry per workload "
+            f"({len(broken_links_per_workload)} != {len(workloads)})"
+        )
     from ...kernels.noc_cycle import resolve_backend
 
     backend = resolve_backend(
@@ -221,11 +268,18 @@ def xsimulate(
     )
     t0 = time.monotonic()
     traffics: list[CompiledTraffic] = []
-    for wl in workloads:
+    for wi, wl in enumerate(workloads):
+        wcfg = cfg
+        if broken_links_per_workload is not None:
+            faults = broken_links_per_workload[wi]
+            if faults is not None:
+                wcfg = dataclasses.replace(
+                    cfg, broken_links=tuple(faults)
+                )
         for algo in resolved:
             traffics.append(
                 compile_workload(
-                    cfg, wl, algo,
+                    wcfg, wl, algo,
                     pad_packets=pad_packets, pad_stages=pad_stages,
                     cost_model=cost_model,
                 )
@@ -243,6 +297,7 @@ def xsimulate(
         T=T, F=F, V=cfg.vcs_per_class,
         BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes, ND=ND,
         kind=ref.kind, n=ref.n, m=ref.m, backend=backend,
+        epoch_len=epoch_len,
     )
     out = jax.tree_util.tree_map(np.asarray, out)  # blocks until ready
     # scatter-compact flat delivery times -> the (B, P, S) view the results
@@ -267,6 +322,9 @@ def xsimulate(
         ctr=out["ctr"],
         crel=out["crel"],
         wall_s=wall,
+        epoch_len=epoch_len,
+        lutil=out["lutil"],
+        rconf=out["rconf"],
     )
 
 
