@@ -20,7 +20,7 @@ def main() -> None:
         default=None,
         help="comma-separated module names "
         "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault,trace,"
-        "telemetry)",
+        "telemetry,topo3d)",
     )
     ap.add_argument(
         "--algos",
@@ -46,6 +46,7 @@ def main() -> None:
         kernels_micro,
         partition_quality,
         telemetry_calibration,
+        topo3d_sweep,
         torus_planner,
         tpu_multicast,
         trace_replay,
@@ -65,6 +66,7 @@ def main() -> None:
         "fault": fault_resilience.run,
         "trace": trace_replay.run,
         "telemetry": telemetry_calibration.run,
+        "topo3d": topo3d_sweep.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

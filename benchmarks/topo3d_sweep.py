@@ -1,0 +1,280 @@
+"""3-D and chiplet-package fabrics: DPM vs MU/MP/NMP beyond the paper's 2-D mesh.
+
+Protocol (ISSUE 9 tentpole gate):
+
+* three fabrics — a 4x4x4 3-D mesh, a 4x4x4 3-D torus (both 3x3x3 in
+  ``--quick``), and a 2x2-chiplet x 4x4-router interposer package — each
+  driven through the batched ``xsimulate`` engine with uniform and hotspot
+  synthetic workloads across MU/MP/NMP/DPM; rows gate on every cell
+  draining and on DPM beating MU's flit-traversal bill (the paper's
+  headline claim, re-checked off-plane);
+* weighted heterogeneous links: DPM planned under the ``weighted`` cost
+  model on a z_weight=4.0 mesh (TSV pillars priced 4x) and a noi_weight=6.0
+  package, against hop-count DPM on the same fabric — the artifact
+  quantifies how many instances change merge choices and the total
+  weighted-cost saving (gated > 0: the lever must actually steer merges);
+* EP-dispatch trace replay: ``ep_dispatch_trace`` (dispatch + combine
+  all-to-all rounds of ``dist.ep``) embedded in snake-label order and
+  replayed phase-barriered through xsim on the 3-D torus and the package;
+* cross-validation: host ``WormholeSim`` vs ``xsimulate`` per-packet
+  delivery sets must be identical on a small instance of each new kind
+  (the fidelity contract extended off-plane, also pinned by
+  tests/test_topo3d.py).
+
+The committed artifact (results/topo3d_sweep.json) records the latency
+grid, the weighted-planning deltas, trace cycle totals, and parity results.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import random
+
+CACHE = pathlib.Path(__file__).parent / "results" / "topo3d_sweep.json"
+
+
+def _hotspot_workload(cfg, rate, cycles, seed, hot_frac=0.35, region_size=8):
+    """Uniform sources, but ``hot_frac`` of the multicasts draw their whole
+    destination set from the ``region_size`` nodes around the fabric center
+    — the concentrated-reply pattern (parameter-server reads, EP combine
+    toward a dense expert) that stresses one chiplet / one z-column."""
+    from repro.noc.traffic import Request, Workload
+
+    g = cfg.make_topology()
+    nodes = g.nodes()
+    rng = random.Random(seed)
+    hot = g.from_idx(g.num_nodes // 2)
+    region = sorted(nodes, key=lambda c: (g.distance(hot, c), g.idx(c)))
+    region = region[:region_size]
+    lo, hi = cfg.dest_range
+    reqs = []
+    for t in range(cycles):
+        for src in nodes:
+            if rng.random() >= rate:
+                continue
+            pool = region if rng.random() < hot_frac else nodes
+            cand = [d for d in pool if d != src]
+            k = min(rng.randint(lo, hi), len(cand))
+            reqs.append(Request(t, src, rng.sample(cand, k)))
+    return Workload(f"hotspot-{rate:.4f}", reqs, cycles)
+
+
+def _fabrics(quick):
+    d = 3 if quick else 4
+    return [
+        (f"mesh3d-{d}x{d}x{d}",
+         dict(n=d, m=d, topology="mesh3d", topology_params=(d,)), 0.02),
+        (f"torus3d-{d}x{d}x{d}",
+         dict(n=d, m=d, topology="torus3d", topology_params=(d,)), 0.02),
+        ("chiplet-2x2x4x4",
+         dict(n=8, m=8, topology="chiplet", topology_params=(2, 2)), 0.012),
+    ]
+
+
+def _weighted_cost(g, p):
+    """Price a plan under the fabric's heterogeneous link weights."""
+    return sum(
+        g.link_weight(u, v)
+        for path in p.paths
+        for u, v in zip(path.hops, path.hops[1:])
+    )
+
+
+def _weighted_planning(name, g, instances):
+    from repro.core import plan
+
+    diffs, saved, cost_w, cost_u = 0, 0.0, 0.0, 0.0
+    for src, dests in instances:
+        p_u = plan("DPM", g, src, dests)  # hop-count objective
+        p_w = plan("DPM", g, src, dests, cost_model="weighted")
+        cu, cw = _weighted_cost(g, p_u), _weighted_cost(g, p_w)
+        cost_u += cu
+        cost_w += cw
+        hops_u = sorted(tuple(q.hops) for q in p_u.paths)
+        hops_w = sorted(tuple(q.hops) for q in p_w.paths)
+        if hops_u != hops_w:
+            diffs += 1
+            saved += cu - cw
+    return {
+        "fabric": name,
+        "instances": len(instances),
+        "plans_changed": diffs,
+        "weighted_cost_hopmodel": round(cost_u, 1),
+        "weighted_cost_weightedmodel": round(cost_w, 1),
+        "weighted_cost_saved": round(cost_u - cost_w, 1),
+    }
+
+
+def _instances(g, count, kmax, seed):
+    rng = random.Random(seed)
+    nodes = g.nodes()
+    out = []
+    for _ in range(count):
+        picks = rng.sample(nodes, rng.randint(3, kmax + 1))
+        out.append((picks[0], picks[1:]))
+    return out
+
+
+def _parity_case(name, cfg_kw, rate, cycles, algo):
+    from repro.core import plan
+    from repro.noc import NoCConfig, WormholeSim, synthetic_workload, xsimulate
+
+    cfg = NoCConfig(warmup=0, drain_grace=1200, **cfg_kw)
+    wl = synthetic_workload(cfg, rate, cycles, seed=3)
+    res = xsimulate(cfg, [wl], (algo,))
+    g = cfg.make_topology()
+    sim = WormholeSim(cfg, measure_window=(0, wl.horizon))
+    for r in wl.requests:
+        sim.add_plan(plan(algo, g, r.src, r.dests), r.time)
+    pst = sim.run(wl.horizon + cfg.drain_grace)
+    psets = {pk.pid: {g.idx(c) for c in pk.delivery_times}
+             for pk in sim.packets}
+    xlat = float(res.avg_latency(0, 0))
+    dev = abs(xlat - pst.avg_latency) / max(1e-9, pst.avg_latency)
+    return {
+        "case": name,
+        "algo": algo,
+        "delivery_sets_equal": bool(psets == res.delivered_sets(0, 0)),
+        "drained": bool(res.all_drained(0, 0)
+                        and pst.packets_finished == pst.packets_created),
+        "latency_host": round(pst.avg_latency, 3),
+        "latency_xsim": round(xlat, 3),
+        "latency_rel_dev": round(dev, 4),
+    }
+
+
+def run(quick: bool = False, algos=None):
+    from repro.core.topology import make_topology
+    from repro.noc import NoCConfig, synthetic_workload, xsimulate
+    from repro.noc.trace import ep_dispatch_trace, replay_xsim
+
+    from .noc_common import resolve_algos
+
+    algos = resolve_algos(algos) if algos is not None else [
+        "MU", "MP", "NMP", "DPM"
+    ]
+    cycles = 100 if quick else 160
+    grace = 1600
+
+    # ---------------- latency grid: fabric x workload shape x algorithm ---
+    grid_rows = []
+    for name, kw, rate in _fabrics(quick):
+        cfg = NoCConfig(
+            warmup=0, drain_grace=grace, multicast_fraction=0.5,
+            dest_range=(3, 6), **kw,
+        )
+        wls = [
+            synthetic_workload(cfg, rate, cycles, seed=1),
+            _hotspot_workload(cfg, rate, cycles, seed=2),
+        ]
+        res = xsimulate(cfg, wls, tuple(algos))
+        for w, shape in enumerate(("uniform", "hotspot")):
+            cell = {"fabric": name, "workload": shape, "rate": rate}
+            for a, algo in enumerate(algos):
+                cell[algo] = {
+                    "avg_latency": round(float(res.avg_latency(w, a)), 3),
+                    "flit_traversals":
+                        int(res.stats(w, a).flit_link_traversals),
+                    "drained": bool(res.all_drained(w, a)),
+                }
+            grid_rows.append(cell)
+
+    # ---------------- weighted heterogeneous links ------------------------
+    n_inst = 24 if quick else 60
+    d = 3 if quick else 4
+    weighted = [
+        _weighted_planning(
+            f"mesh3d-{d}x{d}x{d}-zw4",
+            make_topology("mesh3d", d, d, params=(d, 4.0)),
+            _instances(make_topology("mesh3d", d, d, params=(d, 4.0)),
+                       n_inst, 10, seed=5),
+        ),
+        _weighted_planning(
+            "chiplet-2x2x4x4-noi6",
+            make_topology("chiplet", 8, 8, params=(2, 2, 6.0)),
+            _instances(make_topology("chiplet", 8, 8, params=(2, 2, 6.0)),
+                       n_inst, 10, seed=6),
+        ),
+    ]
+
+    # ---------------- EP-dispatch trace replay ----------------------------
+    traces = []
+    trace_fabrics = [_fabrics(quick)[1]] if quick else _fabrics(quick)[1:]
+    for name, kw, _rate in trace_fabrics:
+        cfg = NoCConfig(warmup=0, drain_grace=grace, **kw)
+        nn = cfg.make_topology().num_nodes
+        tr = ep_dispatch_trace(nn, chunk_bytes=256, algo="DPM")
+        for algo in ("MU", "DPM"):
+            rr = replay_xsim(tr, cfg, algo)
+            traces.append({
+                "fabric": name,
+                "trace": tr.name,
+                "algo": algo,
+                "phases": len(rr.phase_cycles),
+                "total_cycles": int(sum(rr.phase_cycles)),
+            })
+
+    # ---------------- host-vs-xsim parity (fidelity gate) -----------------
+    parity = [
+        _parity_case(
+            "mesh3d-3x3x3",
+            dict(n=3, m=3, topology="mesh3d", topology_params=(3,),
+                 dest_range=(2, 5)), 0.03, 80, "DPM"),
+        _parity_case(
+            "mesh3d-3x3x3-zw2",
+            dict(n=3, m=3, topology="mesh3d", topology_params=(3, 2.0),
+                 dest_range=(2, 5)), 0.03, 80, "DPM"),
+        _parity_case(
+            "chiplet-2x2x4x4",
+            dict(n=8, m=8, topology="chiplet", topology_params=(2, 2),
+                 dest_range=(2, 5)), 0.02, 80, "DPM"),
+    ]
+
+    data = {
+        "quick": quick,
+        "algos": algos,
+        "cycles": cycles,
+        "latency_grid": grid_rows,
+        "weighted_planning": weighted,
+        "ep_dispatch_traces": traces,
+        "parity": parity,
+        "notes": (
+            "xsim batched engine on registered 3-D/chiplet topologies; "
+            "weighted rows compare DPM merge choices under the 'weighted' "
+            "cost model vs hop count on the same heterogeneous fabric"
+        ),
+    }
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(data, indent=1))
+
+    rows = []
+    for cell in grid_rows:
+        assert all(cell[a]["drained"] for a in algos), cell["fabric"]
+        if "MU" in algos and "DPM" in algos:
+            assert (cell["DPM"]["flit_traversals"]
+                    < cell["MU"]["flit_traversals"]), cell
+        rows.append((
+            f"topo3d/{cell['fabric']}/{cell['workload']}", 0.0,
+            ";".join(f"{a}:{cell[a]['avg_latency']}" for a in algos),
+        ))
+    for wrow in weighted:
+        assert wrow["plans_changed"] > 0, wrow
+        assert wrow["weighted_cost_saved"] > 0, wrow
+        rows.append((
+            f"topo3d/weighted/{wrow['fabric']}", 0.0,
+            f"changed={wrow['plans_changed']}/{wrow['instances']};"
+            f"saved={wrow['weighted_cost_saved']}",
+        ))
+    for t in traces:
+        rows.append((
+            f"topo3d/trace/{t['fabric']}/{t['algo']}", 0.0,
+            f"phases={t['phases']};cycles={t['total_cycles']}",
+        ))
+    for p in parity:
+        assert p["delivery_sets_equal"] and p["drained"], p
+        rows.append((
+            f"topo3d/parity/{p['case']}", 0.0,
+            f"sets_equal={p['delivery_sets_equal']};"
+            f"dev={p['latency_rel_dev']}",
+        ))
+    return rows

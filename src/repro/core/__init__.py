@@ -23,6 +23,7 @@ from .algo import (
     HopCountCost,
     LinkContentionCost,
     RoutingAlgorithm,
+    WeightedLinkCost,
     available_algorithms,
     available_cost_models,
     get_algorithm,
@@ -41,8 +42,10 @@ from .partition import (
     basic_partitions,
     brute_force_partition,
     candidate_cost,
+    candidate_ids_for,
     dpm_partition,
     representative,
+    wedge_patterns,
 )
 from .planner import (
     PLANNERS,
@@ -78,10 +81,27 @@ from .routing import (
     path_multicast,
     xy_route,
 )
-from .topology import Topology, Torus, make_topology, ring_delta, torus
+from .topo3d import (
+    ChipletPackage,
+    Mesh3D,
+    Torus3D,
+    chiplet,
+    mesh3d,
+    torus3d,
+)
+from .topology import (
+    Topology,
+    Torus,
+    make_topology,
+    register_topology,
+    registered_topology_kinds,
+    ring_delta,
+    torus,
+)
 
 __all__ = [
     "ALL_CANDIDATE_IDS",
+    "ChipletPackage",
     "Coord",
     "CostModel",
     "DPMResult",
@@ -91,6 +111,7 @@ __all__ = [
     "FaultyTopology",
     "HopCountCost",
     "LinkContentionCost",
+    "Mesh3D",
     "MeshGrid",
     "MinimalRouteProvider",
     "MulticastPlan",
@@ -101,11 +122,15 @@ __all__ = [
     "RoutingAlgorithm",
     "Topology",
     "Torus",
+    "Torus3D",
+    "WeightedLinkCost",
     "available_algorithms",
     "available_cost_models",
     "basic_partitions",
     "brute_force_partition",
     "candidate_cost",
+    "candidate_ids_for",
+    "chiplet",
     "dpm_partition",
     "dual_path_cost",
     "faulty",
@@ -115,6 +140,7 @@ __all__ = [
     "grid",
     "label_route",
     "make_topology",
+    "mesh3d",
     "multi_unicast_cost",
     "path_multicast",
     "plan",
@@ -129,6 +155,8 @@ __all__ = [
     "provider_for",
     "register_algorithm",
     "register_cost_model",
+    "register_topology",
+    "registered_topology_kinds",
     "representative",
     "ring_delta",
     "route_cost_matrices",
@@ -136,7 +164,9 @@ __all__ = [
     "segment_plan_for_faults",
     "temporary_algorithm",
     "torus",
+    "torus3d",
     "unregister_algorithm",
     "unregister_cost_model",
+    "wedge_patterns",
     "xy_route",
 ]

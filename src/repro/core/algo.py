@@ -33,7 +33,7 @@ from .routing import path_multicast
 if TYPE_CHECKING:  # planner imports this module; annotation-only reverse dep
     from .planner import MulticastPlan
 
-TOPOLOGY_KINDS = ("mesh", "torus")
+TOPOLOGY_KINDS = ("mesh", "torus", "mesh3d", "torus3d", "chiplet")
 
 
 # ---------------------------------------------------------------------------
@@ -148,9 +148,34 @@ class LinkContentionCost(CostModel):
     def link_cost(self, g: MeshGrid, u: Coord, v: Coord) -> float:
         if g.wrap:
             return 1.0
-        if u[0] != v[0]:  # x link: cut between columns min(x), min(x)+1
-            return 1.0 + self.lam * self._cut_ratio(min(u[0], v[0]), g.n)
-        return 1.0 + self.lam * self._cut_ratio(min(u[1], v[1]), g.rows)
+        # the one axis the link moves along; cut between planes i, i+1
+        for k in range(len(u)):
+            if u[k] != v[k]:
+                extent = (g.n, getattr(g, "m", g.rows) or g.rows,
+                          getattr(g, "d", 1))[k]
+                return 1.0 + self.lam * self._cut_ratio(min(u[k], v[k]), extent)
+        return 1.0
+
+
+class WeightedLinkCost(CostModel):
+    """Hop counting priced by the topology's heterogeneous link classes.
+
+    Each hop costs ``Topology.link_weight(u, v)`` — 1.0 for planar mesh
+    links, ``z_weight`` for TSV pillars on the 3-D topologies,
+    ``noi_weight`` for interposer crossings on a chiplet package. On a
+    uniform topology every weight is 1.0 and the model degenerates to hop
+    counting, so it is safe as a default objective everywhere; on a
+    heterogeneous fabric it is the lever that makes Algorithm 1's merge
+    loop prefer partitions whose chains stay on cheap planar links
+    (asserted by tests/test_topo3d.py, quantified by
+    benchmarks/topo3d_sweep.py).
+    """
+
+    name = "weighted"
+
+    def link_cost(self, g: MeshGrid, u: Coord, v: Coord) -> float:
+        lw = getattr(g, "link_weight", None)
+        return 1.0 if lw is None else lw(u, v)
 
 
 class EnergyCost(CostModel):
@@ -464,4 +489,5 @@ def available_algorithms(
 # the NoC config (repro.noc imports repro.core, so it cannot load here).
 register_cost_model(HopCountCost())
 register_cost_model(LinkContentionCost())
+register_cost_model(WeightedLinkCost())
 register_cost_model(EnergyCost, name="energy")

@@ -19,6 +19,11 @@ import numpy as np
 
 Coord = tuple[int, int]
 
+# canonical 2-D direction order (+x, -x, +y, -y) — directed-link ids are
+# idx(u) * ports + direction, shared by telemetry and the xsim geometry
+DIRS2 = ((1, 0), (-1, 0), (0, 1), (0, -1))
+_DIR_OF2 = {d: i for i, d in enumerate(DIRS2)}
+
 
 @dataclass(frozen=True)
 class MeshGrid:
@@ -33,6 +38,8 @@ class MeshGrid:
 
     kind = "mesh"  # topology discriminator (planner cache key)
     wrap = False
+    ports = 4  # output ports per router (directed-link ids span idx*ports+dir)
+    params = ()  # extra factory args beyond (n, m) — planner cache-key suffix
 
     @property
     def rows(self) -> int:
@@ -86,6 +93,32 @@ class MeshGrid:
         """Minimal hop count a -> b (Manhattan; toroidal on a torus)."""
         dx, dy = self.delta(a, b)
         return abs(dx) + abs(dy)
+
+    # -- directed-link geometry (telemetry / xsim port numbering) -----------
+    def direction(self, u: Coord, v: Coord) -> int:
+        """Port index in [0, ports) of the directed link u -> v."""
+        d = _DIR_OF2.get(tuple(self.delta(u, v)))
+        if d is None:
+            raise ValueError(f"{u}->{v} is not a single-hop link")
+        return d
+
+    def dir_delta(self, d: int) -> Coord:
+        """Unit displacement of port ``d`` (inverse of ``direction``)."""
+        return DIRS2[d]
+
+    def link_weight(self, u: Coord, v: Coord) -> float:
+        """Relative price class of link u -> v (1.0 = planar baseline;
+        heterogeneous topologies price TSV / interposer links higher)."""
+        return 1.0
+
+    def from_idx(self, i: int) -> Coord:
+        """Inverse of ``idx`` (the kernels' node numbering)."""
+        y, x = divmod(i, self.n)
+        return x, y
+
+    def nodes(self) -> list[Coord]:
+        """All node coordinates in ``idx`` order."""
+        return [self.from_idx(i) for i in range(self.num_nodes)]
 
     @staticmethod
     def manhattan(a: Coord, b: Coord) -> int:

@@ -8,13 +8,66 @@ the source plus merges of up to 3 *consecutive* basic partitions.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 from .algo import CostModel, get_cost_model
 from .grid import Coord, MeshGrid
 from .routefn import provider_for
 
-# Candidate index sets: 8 singles, 8 consecutive pairs, 8 consecutive triples.
+# The paper's 2-D wedge order, counter-clockwise from the upper-right
+# quadrant (Fig. 2a), as (sign(dx), sign(dy)) patterns:
+# P0 (+,+)  P1 (0,+)  P2 (-,+)  P3 (-,0)  P4 (-,-)  P5 (0,-)  P6 (+,-)  P7 (+,0)
+_RING2: tuple[tuple[int, int], ...] = (
+    (1, 1), (0, 1), (-1, 1), (-1, 0), (-1, -1), (0, -1), (1, -1), (1, 0),
+)
+
+
+@functools.lru_cache(maxsize=None)
+def wedge_patterns(ndim: int) -> tuple[tuple[int, ...], ...]:
+    """Canonical ordered sign patterns of the basic partitions in ``ndim``
+    dimensions: every non-zero pattern in {-1, 0, +1}^ndim.
+
+    2-D: the paper's 8 wedges P0..P7 in the order above. 3-D: 26 wedges —
+    the dz=0 ring first (the 2-D order, so a flat destination set partitions
+    identically to the 2-D case), then the dz=+1 block of 9 (the 8 ring
+    patterns followed by the (0,0,+1) pole), then the dz=-1 block. This is
+    the order the dpm_cost kernels' partition-membership tables are built in
+    (``kernels/dpm_cost``) — keep them in lockstep.
+    """
+    if ndim == 2:
+        return _RING2
+    if ndim == 3:
+        pats = [(sx, sy, 0) for sx, sy in _RING2]
+        for sz in (1, -1):
+            pats += [(sx, sy, sz) for sx, sy in _RING2]
+            pats.append((0, 0, sz))
+        return tuple(pats)
+    raise ValueError(f"unsupported dimensionality {ndim}")
+
+
+@functools.lru_cache(maxsize=None)
+def _pattern_index(ndim: int) -> dict[tuple[int, ...], int]:
+    return {p: i for i, p in enumerate(wedge_patterns(ndim))}
+
+
+def num_wedges(topo: MeshGrid | None, src: Coord | None = None) -> int:
+    """Number of basic partitions for a topology (8 in 2-D, 26 in 3-D)."""
+    ndim = len(src) if topo is None else len(topo.from_idx(0))
+    return len(wedge_patterns(ndim))
+
+
+@functools.lru_cache(maxsize=None)
+def candidate_ids_for(np_: int, max_merge: int = 3) -> tuple[tuple[int, ...], ...]:
+    """DPM's candidate family over ``np_`` basic partitions: singles plus
+    merges of up to ``max_merge`` cyclically *consecutive* partitions."""
+    out: list[tuple[int, ...]] = [(i,) for i in range(np_)]
+    for k in range(2, max_merge + 1):
+        out += [tuple((i + j) % np_ for j in range(k)) for i in range(np_)]
+    return tuple(out)
+
+
+# 2-D candidate index sets: 8 singles, 8 consecutive pairs, 8 triples.
 SINGLE_IDS: list[tuple[int, ...]] = [(i,) for i in range(8)]
 PAIR_IDS: list[tuple[int, ...]] = [(i, (i + 1) % 8) for i in range(8)]
 TRIPLE_IDS: list[tuple[int, ...]] = [(i, (i + 1) % 8, (i + 2) % 8) for i in range(8)]
@@ -24,46 +77,32 @@ ALL_CANDIDATE_IDS: list[tuple[int, ...]] = SINGLE_IDS + PAIR_IDS + TRIPLE_IDS
 def basic_partitions(
     src: Coord, dests: list[Coord], topo: MeshGrid | None = None
 ) -> list[list[Coord]]:
-    """Split destinations into the 8 basic partitions P0..P7 around ``src``.
+    """Split destinations into the basic partitions around ``src``.
 
-    Membership is the sign pattern of the signed shortest displacement
-    (dx, dy) from the source:
-
-    P0: dx>0, dy>0   P1: dx=0, dy>0   P2: dx<0, dy>0   P3: dx<0, dy=0
-    P4: dx<0, dy<0   P5: dx=0, dy<0   P6: dx>0, dy<0   P7: dx>0, dy=0
-    (counter-clockwise starting from the upper-right quadrant, Fig. 2a).
+    Membership is the sign pattern of the signed shortest displacement from
+    the source — 8 wedges P0..P7 in 2-D (counter-clockwise from the
+    upper-right quadrant, Fig. 2a), 26 in 3-D (``wedge_patterns``).
 
     Without ``topo`` (or on a mesh) the displacement is the plain coordinate
     difference, reproducing the paper's geometry; edge/corner sources simply
     leave the out-of-mesh partitions empty. On a torus ``topo.delta`` takes
     the shorter way around each ring, so each partition is the wedge of
     nodes whose minimal route leaves the source in that direction
-    (DESIGN.md §3).
+    (DESIGN.md §3). On a chiplet package the delta stays geometric, so the
+    8 wedges apply unchanged even though routes cross declared boundaries.
     """
-    parts: list[list[Coord]] = [[] for _ in range(8)]
+    ndim = len(src)
+    index = _pattern_index(ndim)
+    parts: list[list[Coord]] = [[] for _ in range(len(index))]
     for d in dests:
         if topo is None:
-            dx, dy = d[0] - src[0], d[1] - src[1]
+            dv = tuple(d[k] - src[k] for k in range(ndim))
         else:
-            dx, dy = topo.delta(src, d)
-        if dx > 0 and dy > 0:
-            parts[0].append(d)
-        elif dx == 0 and dy > 0:
-            parts[1].append(d)
-        elif dx < 0 and dy > 0:
-            parts[2].append(d)
-        elif dx < 0 and dy == 0:
-            parts[3].append(d)
-        elif dx < 0 and dy < 0:
-            parts[4].append(d)
-        elif dx == 0 and dy < 0:
-            parts[5].append(d)
-        elif dx > 0 and dy < 0:
-            parts[6].append(d)
-        elif dx > 0 and dy == 0:
-            parts[7].append(d)
-        else:  # d == src: already "delivered"; drop it
-            pass
+            dv = topo.delta(src, d)
+        sign = tuple((x > 0) - (x < 0) for x in dv)
+        i = index.get(sign)
+        if i is not None:  # all-zero pattern == src: already "delivered"
+            parts[i].append(d)
     return parts
 
 
@@ -165,12 +204,9 @@ def dpm_partition(
     """
     cm = get_cost_model(cost_model)
     parts = basic_partitions(src, dests, g)
+    np_ = len(parts)
 
-    candidate_ids = list(SINGLE_IDS)
-    if max_merge >= 2:
-        candidate_ids += PAIR_IDS
-    if max_merge >= 3:
-        candidate_ids += TRIPLE_IDS
+    candidate_ids = list(candidate_ids_for(np_, max_merge))
 
     costs: dict[tuple[int, ...], PartitionCost] = {}
     for ids in candidate_ids:
@@ -221,7 +257,7 @@ def dpm_partition(
 
     final: list[PartitionCost] = [costs[ids] for ids in chosen]
     # Leftover basic partitions that did not take part in any merge.
-    for i in range(8):
+    for i in range(np_):
         if i not in covered and parts[i]:
             final.append(costs[(i,)])
     return DPMResult(final, iterations, trace)
@@ -243,9 +279,10 @@ def brute_force_partition(
     """
     cm = get_cost_model(cost_model)
     parts = basic_partitions(src, dests, g)
-    nonempty = frozenset(i for i in range(8) if parts[i])
+    candidates = candidate_ids_for(len(parts))
+    nonempty = frozenset(i for i in range(len(parts)) if parts[i])
     costs: dict[tuple[int, ...], float] = {}
-    for ids in ALL_CANDIDATE_IDS:
+    for ids in candidates:
         union: list[Coord] = []
         for i in ids:
             union.extend(parts[i])
@@ -261,7 +298,7 @@ def brute_force_partition(
             best = (acc_cost, list(acc))
             return
         pivot = min(remaining)
-        for ids in ALL_CANDIDATE_IDS:
+        for ids in candidates:
             s = set(ids) & nonempty
             if pivot not in s or not s <= remaining:
                 continue

@@ -369,13 +369,14 @@ def _plan_cached(
     n: int,
     m: int,
     faults: tuple,
+    params: tuple,
     algo: str,
     cost_model: str,
     src: Coord,
     dests: tuple[Coord, ...],
 ):
     global _plan_hits, _plan_misses
-    key = (kind, n, m, faults, algo, cost_model, src, dests)
+    key = (kind, n, m, faults, params, algo, cost_model, src, dests)
     cached = _plan_cache.get(key)
     if cached is not None:
         _plan_cache.move_to_end(key)
@@ -385,16 +386,17 @@ def _plan_cached(
     _plan_misses += 1
     _key_stats(algo, cost_model)["misses"] += 1
     a = get_algorithm(algo)
-    topo = make_topology(kind, n, m, faults)
+    topo = make_topology(kind, n, m, faults, params)
     p = a.plan(
         topo, src, list(dests),
         cost_model=get_cost_model(cost_model or a.default_cost_model),
     )
-    p = segment_plan_for_faults(p, topo) if faults else p
+    if faults or getattr(topo, "needs_bfs_routes", False):
+        p = segment_plan_for_faults(p, topo)
     _plan_cache[key] = p
     while len(_plan_cache) > _PLAN_CACHE_MAXSIZE:
         evicted, _ = _plan_cache.popitem(last=False)
-        _key_stats(evicted[4], evicted[5])["evictions"] += 1
+        _key_stats(evicted[5], evicted[6])["evictions"] += 1
     return p
 
 
@@ -432,15 +434,19 @@ def plan(
     ``algo`` is a registered algorithm name (or a ``RoutingAlgorithm``
     instance); ``cost_model`` a registered model name or instance, defaulting
     to the algorithm's own objective. The cache key is normalized —
-    (topology kind, n, rows, fault set, algorithm, cost-model, src, sorted
-    unique dests) — so grid(8) and grid(8, 8) share one entry, mesh/torus
-    plans of the same dimensions never collide, two cost models never alias
-    one entry, and plans for different broken-link sets (``FaultyTopology``)
-    never alias each other or the healthy plan. Cost-insensitive algorithms
+    (topology kind, n, m, fault set, extra factory params, algorithm,
+    cost-model, src, sorted unique dests) — so grid(8) and grid(8, 8) share
+    one entry, mesh/torus plans of the same dimensions never collide, two
+    cost models never alias one entry, plans for different broken-link sets
+    (``FaultyTopology``) never alias each other or the healthy plan, and
+    3-D/chiplet topologies with different depth/weight/boundary params
+    (``Topology.params``) key separately. Cost-insensitive algorithms
     share one entry across models. Unregistered algorithm/cost-model
     instances plan uncached (the name key could not be trusted to resolve
-    back to them). On a degraded topology every returned plan is segmented
-    into label-monotone worms (``segment_plan_for_faults``) — the
+    back to them). On a degraded topology — and on any topology whose
+    provider routes by BFS (``needs_bfs_routes``), whose unicast hops are
+    not label-monotone — every returned plan is segmented into
+    label-monotone worms (``segment_plan_for_faults``), the
     deadlock-freedom guarantee of DESIGN.md §7.
     """
     a = get_algorithm(algo)
@@ -457,11 +463,18 @@ def plan(
     faults = getattr(g, "faults", ())
     if not cacheable:
         p = a.plan(g, src, dests, cost_model=cm)
-        return segment_plan_for_faults(p, g) if faults else p
+        if faults or getattr(g, "needs_bfs_routes", False):
+            p = segment_plan_for_faults(p, g)
+        return p
     cm_key = cm.name if a.cost_sensitive else ""
+    # the factory's m argument: the y extent where it exists (3-D meshes
+    # have rows = m*d), the row count otherwise
+    m_key = getattr(g, "m", None)
+    if m_key is None:
+        m_key = g.rows
     return _plan_cached(
-        g.kind, g.n, g.rows, faults, a.name, cm_key, src,
-        tuple(sorted(set(dests))),
+        g.kind, g.n, m_key, faults, getattr(g, "params", ()), a.name, cm_key,
+        src, tuple(sorted(set(dests))),
     )
 
 

@@ -42,9 +42,9 @@ from .grid import Coord, MeshGrid
 
 Link = tuple[Coord, Coord]
 
-# Directed-link id space shared with noc.xsim: idx(u) * 4 + direction(u->v),
-# directions ordered +x, -x, +y, -y.
-_DIRS: tuple[Coord, ...] = ((1, 0), (-1, 0), (0, 1), (0, -1))
+# Directed-link id space shared with noc.xsim: idx(u) * ports + dir(u->v),
+# directions ordered +x, -x, +y, -y (+z, -z on the 3-D topologies); each
+# topology's ``ports``/``direction`` hooks define the layout.
 
 
 class DisconnectedError(RuntimeError):
@@ -105,28 +105,55 @@ class FaultyTopology:
     def num_nodes(self) -> int:
         return self.base.num_nodes
 
-    def label(self, x: int, y: int) -> int:
-        return self.base.label(x, y)
+    @property
+    def ports(self) -> int:
+        return getattr(self.base, "ports", 4)
+
+    @property
+    def params(self) -> tuple:
+        return getattr(self.base, "params", ())
+
+    @property
+    def needs_bfs_routes(self) -> bool:
+        return getattr(self.base, "needs_bfs_routes", False)
+
+    def label(self, *c) -> int:
+        return self.base.label(*c)
 
     def unlabel(self, lab: int) -> Coord:
         return self.base.unlabel(lab)
 
-    def row_major(self, x: int, y: int) -> int:
-        return self.base.row_major(x, y)
+    def row_major(self, *c) -> int:
+        return self.base.row_major(*c)
 
     def idx(self, c: Coord) -> int:
         return self.base.idx(c)
 
-    def in_bounds(self, x: int, y: int) -> bool:
-        return self.base.in_bounds(x, y)
+    def from_idx(self, i: int) -> Coord:
+        return self.base.from_idx(i)
 
-    def normalize(self, x: int, y: int) -> Coord:
-        return self.base.normalize(x, y)
+    def in_bounds(self, *c) -> bool:
+        return self.base.in_bounds(*c)
+
+    def normalize(self, *c) -> Coord:
+        return self.base.normalize(*c)
 
     def delta(self, a: Coord, b: Coord) -> Coord:
         """Signed geometric displacement of the *base* topology: partition
         membership (Definitions 1-3 wedges) stays geometric under faults."""
         return self.base.delta(a, b)
+
+    def direction(self, u: Coord, v: Coord) -> int:
+        return self.base.direction(u, v)
+
+    def dir_delta(self, d: int) -> Coord:
+        return self.base.dir_delta(d)
+
+    def link_weight(self, u: Coord, v: Coord) -> float:
+        return self.base.link_weight(u, v)
+
+    def nodes(self) -> list[Coord]:
+        return self.base.nodes()
 
     def all_labels(self) -> np.ndarray:
         return self.base.all_labels()
@@ -142,8 +169,8 @@ class FaultyTopology:
     def _broken(self) -> frozenset[Link]:
         return frozenset(self.faults)
 
-    def neighbors(self, x: int, y: int) -> list[Coord]:
-        u = self.base.normalize(x, y)
+    def neighbors(self, *c) -> list[Coord]:
+        u = self.base.normalize(*c)
         return [v for v in self.base.neighbors(*u) if not self.is_broken(u, v)]
 
     def distance(self, a: Coord, b: Coord) -> int:
@@ -205,11 +232,11 @@ def router_failure(topo: MeshGrid, *nodes: Coord) -> tuple[Link, ...]:
     base = topo.base if isinstance(topo, FaultyTopology) else topo
     links: set[Link] = set()
     for node in nodes:
-        x, y = node
-        if not base.in_bounds(x, y):
+        u = tuple(node)
+        if not base.in_bounds(*u):
             raise ValueError(f"{node} is not a node of {base}")
-        for v in base.neighbors(x, y):
-            links.add(_canon(base, (x, y), v))
+        for v in base.neighbors(*u):
+            links.add(_canon(base, u, v))
     return tuple(sorted(links))
 
 
@@ -255,20 +282,19 @@ class RouteProvider:
         raise NotImplementedError
 
     def link_weights(self, topo: MeshGrid, cost_model=None) -> np.ndarray:
-        """(num_nodes * 4,) float32 price per directed link id (the xsim id
-        space ``idx(u) * 4 + dir``); non-existent links hold +inf."""
-        w = np.full(topo.num_nodes * 4, np.inf, np.float32)
-        for y in range(topo.rows):
-            for x in range(topo.n):
-                u = (x, y)
-                live = set(topo.neighbors(x, y))
-                for d, (dx, dy) in enumerate(_DIRS):
-                    v = topo.normalize(x + dx, y + dy)
-                    if v in live:
-                        w[topo.idx(u) * 4 + d] = (
-                            1.0 if cost_model is None
-                            else cost_model.link_cost(topo, u, v)
-                        )
+        """(num_nodes * ports,) float32 price per directed link id (the
+        xsim id space ``idx(u) * ports + dir``); absent links hold +inf —
+        including broken links on a degraded topology and undeclared
+        boundary crossings on a chiplet package."""
+        D = getattr(topo, "ports", 4)
+        w = np.full(topo.num_nodes * D, np.inf, np.float32)
+        for u in topo.nodes():
+            base = topo.idx(u) * D
+            for v in topo.neighbors(*u):
+                w[base + topo.direction(u, v)] = (
+                    1.0 if cost_model is None
+                    else cost_model.link_cost(topo, u, v)
+                )
         return w
 
 
@@ -278,20 +304,19 @@ class MinimalRouteProvider(RouteProvider):
     name = "minimal"
 
     def unicast(self, topo: MeshGrid, src: Coord, dst: Coord) -> list[Coord]:
-        """Dimension-ordered (XY) minimal route; each dimension travels its
-        signed shortest leg (``Topology.delta``), so the length always
-        equals ``Topology.distance``."""
-        dx, dy = topo.delta(src, dst)
-        x, y = src
+        """Dimension-ordered (XY[Z]) minimal route; each dimension travels
+        its signed shortest leg (``Topology.delta``) in dimension order,
+        so the length always equals ``Topology.distance``."""
+        d = topo.delta(src, dst)
+        cur = tuple(src)
         path = [src]
-        step = 1 if dx > 0 else -1
-        for _ in range(abs(dx)):
-            x, y = topo.normalize(x + step, y)
-            path.append((x, y))
-        step = 1 if dy > 0 else -1
-        for _ in range(abs(dy)):
-            x, y = topo.normalize(x, y + step)
-            path.append((x, y))
+        for axis, leg in enumerate(d):
+            step = 1 if leg > 0 else -1
+            for _ in range(abs(leg)):
+                nxt = list(cur)
+                nxt[axis] += step
+                cur = topo.normalize(*nxt)
+                path.append(cur)
         return path
 
     def label_step(
@@ -344,6 +369,10 @@ class FaultAwareProvider(RouteProvider):
     _minimal = MinimalRouteProvider()
 
     def unicast(self, topo: FaultyTopology, src: Coord, dst: Coord) -> list[Coord]:
+        if getattr(topo, "needs_bfs_routes", False):
+            # sparse-link base (chiplet package): dimension-ordered routes
+            # may cross links that do not exist at all — always BFS
+            return self._bfs_path(topo, src, dst)
         path = self._minimal.unicast(topo.base, src, dst)
         if not any(topo.is_broken(u, v) for u, v in zip(path, path[1:])):
             return path
@@ -357,7 +386,7 @@ class FaultAwareProvider(RouteProvider):
         if dst not in tree:
             raise DisconnectedError(
                 f"{dst} unreachable from {src} on degraded {topo.kind} "
-                f"({len(topo.faults)} broken links)"
+                f"({len(getattr(topo, 'faults', ()))} broken links)"
             )
         # stable digest, NOT hash(): str hashing is salted per process
         flow = zlib.crc32(repr((src, dst)).encode())
@@ -384,7 +413,7 @@ class FaultAwareProvider(RouteProvider):
         if cur_n not in dists:
             raise DisconnectedError(
                 f"{target} unreachable from {cur} on degraded {topo.kind} "
-                f"({len(topo.faults)} broken links)"
+                f"({len(getattr(topo, 'faults', ()))} broken links)"
             )
         dcur = dists[cur_n][0]
         lt = topo.label(*target)
@@ -414,17 +443,36 @@ class FaultAwareProvider(RouteProvider):
     # device-side plan crossing one prices itself out of the comparison.
 
 
+class BFSRouteProvider(MinimalRouteProvider):
+    """Sparse-link topologies (chiplet packages, ``needs_bfs_routes``).
+
+    The label rule is inherited unchanged — its termination argument only
+    needs the snake successor to be a neighbor, which the two-level
+    chiplet snake guarantees — but dimension-ordered unicast may cross
+    links the interposer does not provide, so ``unicast`` is the
+    deterministic load-balanced BFS shortest path instead.
+    """
+
+    name = "bfs"
+
+    def unicast(self, topo: MeshGrid, src: Coord, dst: Coord) -> list[Coord]:
+        return FaultAwareProvider._bfs_path(topo, src, dst)
+
+
 _MINIMAL = MinimalRouteProvider()
 _FAULT_AWARE = FaultAwareProvider()
+_BFS = BFSRouteProvider()
 
 
 def provider_for(topo: MeshGrid) -> RouteProvider:
     """Resolve the route provider for a topology: degraded topologies get
-    the detouring provider, everything else the paper's minimal functions
-    (``faulty(topo, ())`` returns the base, so an empty fault set stays on
-    the bit-identical legacy path)."""
+    the detouring provider, sparse-link topologies the BFS one, everything
+    else the paper's minimal functions (``faulty(topo, ())`` returns the
+    base, so an empty fault set stays on the bit-identical legacy path)."""
     if isinstance(topo, FaultyTopology):
         return _FAULT_AWARE
+    if getattr(topo, "needs_bfs_routes", False):
+        return _BFS
     return _MINIMAL
 
 
@@ -434,7 +482,7 @@ def provider_for(topo: MeshGrid) -> RouteProvider:
 @functools.lru_cache(maxsize=256)
 def _route_cost_matrices_cached(topo: MeshGrid, cm) -> tuple:
     NN = topo.num_nodes
-    nodes = [(x, y) for y in range(topo.rows) for x in range(topo.n)]
+    nodes = topo.nodes()
     dist = np.zeros((NN, NN), np.int32)
     weight = np.zeros((NN, NN), np.float32)
     provider = provider_for(topo)

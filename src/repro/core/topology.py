@@ -123,16 +123,44 @@ def torus(n: int, m: int | None = None) -> Torus:
 _FACTORIES = {"mesh": grid, "torus": torus}
 
 
+def register_topology(kind: str, factory) -> None:
+    """Register a topology factory under ``kind``.
+
+    ``factory(n, m, *params)`` must return an interned instance whose
+    ``kind``/``params`` attributes round-trip through ``make_topology`` —
+    that tuple is the planner cache key. Registering lets new topology
+    modules (e.g. ``core.topo3d``) plug in without editing this file;
+    re-registering an existing kind raises to keep cache keys unambiguous.
+    """
+    if kind in _FACTORIES:
+        raise ValueError(f"topology kind {kind!r} is already registered")
+    _FACTORIES[kind] = factory
+
+
+def registered_topology_kinds() -> tuple[str, ...]:
+    return tuple(sorted(_FACTORIES))
+
+
 def make_topology(
-    kind: str, n: int, m: int | None = None, faults: tuple = ()
+    kind: str, n: int, m: int | None = None, faults: tuple = (),
+    params: tuple = (),
 ) -> MeshGrid:
-    """Construct a topology from its cache key (kind, n, m, faults).
+    """Construct a topology from its cache key (kind, n, m, faults, params).
 
     ``faults`` is an iterable of broken (u, v) links; when non-empty the
     base topology is wrapped in a ``FaultyTopology`` (interned, like the
     bases), which is what keys the planner cache for degraded plans.
+    ``params`` are the extra factory arguments beyond (n, m) — empty for
+    mesh/torus; depth/weight-class tuples for the ``topo3d`` kinds.
     """
-    base = _FACTORIES[kind](n, m)
+    try:
+        factory = _FACTORIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology kind {kind!r}; registered kinds: "
+            f"{', '.join(registered_topology_kinds())}"
+        ) from None
+    base = factory(n, m, *params)
     if not faults:
         return base
     from .routefn import faulty  # routefn imports grid only; no cycle

@@ -33,7 +33,7 @@ import numpy as np
 from ..core.grid import Coord
 from ..core.planner import MulticastPlan, plan
 from ..core.routefn import faulty
-from ..core.topology import Torus, make_topology, torus
+from ..core.topology import Topology, Torus, torus  # Torus re-exported (dist)
 
 # Alpha-beta-hop calibration constants for Schedule.cost: per-round software/
 # launch latency, per-hop fall-through, per-link bandwidth. Absolute values
@@ -159,14 +159,19 @@ def _relay_edges(p: MulticastPlan) -> list[tuple[Coord, Coord, int]]:
 
 
 def plan_torus_multicast(
-    t: Torus,
+    t: Topology,
     src: Coord,
     dests: list[Coord],
     algo="DPM",
     cost_model=None,
     broken_links: tuple = (),
 ) -> MulticastPlan:
-    """DPM partitioning (Algorithm 1) reused on torus geometry.
+    """DPM partitioning (Algorithm 1) reused on interconnect geometry.
+
+    ``t`` is any registered topology: a 2-D wraparound torus (the name's
+    origin), a 3-D ``torus3d`` (a TPU-pod ICI is a 3-D torus — wedge
+    partitions become the 26 sign patterns), or a ``chiplet`` package
+    (multi-die ICI with interposer crossings priced by ``link_weight``).
 
     ``algo`` resolves through the routing-algorithm registry (name or
     ``RoutingAlgorithm`` instance; unknown names raise listing what is
@@ -183,7 +188,7 @@ def plan_torus_multicast(
 
 
 def schedule_multicasts(
-    topo: Torus,
+    topo: Topology,
     requests: list[tuple[Coord, list[Coord]]],
     algo="DPM",
     cost_model=None,
@@ -191,7 +196,9 @@ def schedule_multicasts(
 ) -> Schedule:
     """Schedule a batch of concurrent multicasts as ppermute rounds.
 
-    ``requests`` is a list of ``(src, dests)`` coordinate pairs on ``topo``;
+    ``topo`` is any registered topology (2-D/3-D torus, mesh, chiplet
+    package — ranks are ``topo.idx`` order). ``requests`` is a list of
+    ``(src, dests)`` coordinate pairs on ``topo``;
     each is planned by any registered routing algorithm under ``cost_model``.
     ``broken_links`` (or passing an already-degraded ``FaultyTopology``)
     schedules on the degraded fabric: relay edges follow the detoured

@@ -12,14 +12,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .dpm_cost import CANDS, dpm_cost_table, dpm_cost_table_weighted
+from ...core.partition import candidate_ids_for, wedge_patterns
+from .dpm_cost import BIG, CANDS, dpm_cost_table, dpm_cost_table_weighted
 
 _SINGLES = jnp.arange(8)
-# candidate -> bitmask over the 8 basic partitions
-_CAND_BITS = jnp.array(
-    [sum(1 << i for i in ids) for ids in CANDS], dtype=jnp.int32
-)
+
+
+@functools.lru_cache(maxsize=None)
+def _cand_bits(np_: int) -> np.ndarray:
+    """candidate -> bitmask over the ``np_`` basic partitions (np_ <= 30).
+
+    numpy (not jnp) so the cached constant never captures a jit tracer.
+    """
+    return np.array(
+        [sum(1 << i for i in ids) for ids in candidate_ids_for(np_)],
+        dtype=np.int32,
+    )
 
 
 def _on_cpu() -> bool:
@@ -62,24 +72,30 @@ def total_plan_cost(chosen, costs):
     return jnp.sum(jnp.where(chosen, costs, 0), axis=1)
 
 
-def _greedy_merge(costs, reps):
+def _greedy_merge(costs, reps, np_: int = 8):
     """Algorithm 1's greedy merge over an already-computed candidate table.
 
-    Shared by the hop-count and weighted paths; ``costs`` may be int32 (hop
-    counting) or float32 (weighted objectives) — savings stay in the input
-    dtype and the host tie-break is reproduced exactly in either.
+    Shared by the hop-count, weighted, and generic-topology paths; ``costs``
+    may be int32 (hop counting) or float32 (weighted objectives) — savings
+    stay in the input dtype and the host tie-break is reproduced exactly in
+    either. ``np_`` is the basic-partition count (8 wedges in 2-D, 26 in
+    3-D); the candidate axis is ``3 * np_`` (singles + consecutive pairs +
+    triples, ``core.partition.candidate_ids_for`` order).
     """
+    cands = candidate_ids_for(np_)
+    NC = len(cands)
+    cand_bits = jnp.asarray(_cand_bits(np_))
     P = costs.shape[0]
-    nonempty = reps >= 0  # (P, 24)
+    nonempty = reps >= 0  # (P, NC)
 
     split_cost = jnp.zeros_like(costs)
-    for ci, ids in enumerate(CANDS):
+    for ci, ids in enumerate(cands):
         if len(ids) == 1:
             continue
         sc = sum(costs[:, i] for i in ids)
         split_cost = split_cost.at[:, ci].set(sc)
     saving0 = jnp.where(
-        (jnp.arange(24) >= 8)[None, :] & nonempty,
+        (jnp.arange(NC) >= np_)[None, :] & nonempty,
         jnp.maximum(0, split_cost - costs),
         0,
     )
@@ -90,13 +106,13 @@ def _greedy_merge(costs, reps):
     # scalar "saving * K - adj" encoding would mis-rank near-ties under
     # the energy/contention objectives)
     prio_adj = (
-        jnp.array([len(ids) for ids in CANDS], jnp.int32) * 32
-        + jnp.arange(24, dtype=jnp.int32)
+        jnp.array([len(ids) for ids in cands], jnp.int32) * 128
+        + jnp.arange(NC, dtype=jnp.int32)
     )
 
     def step(state, _):
         saving, covered, chosen = state
-        overlap = (_CAND_BITS[None, :] & covered[:, None]) != 0
+        overlap = (cand_bits[None, :] & covered[:, None]) != 0
         s = jnp.where(overlap, 0, saving)
         smax = jnp.max(s, axis=1, keepdims=True)
         is_best = (s == smax) & (s > 0)
@@ -104,21 +120,25 @@ def _greedy_merge(costs, reps):
             jnp.where(is_best, prio_adj[None, :], jnp.int32(2**30)), axis=1
         )
         has = smax[:, 0] > 0
-        bbits = _CAND_BITS[best]
+        bbits = cand_bits[best]
         covered = jnp.where(has, covered | bbits, covered)
         chosen = chosen.at[jnp.arange(P), best].set(
             chosen[jnp.arange(P), best] | has
         )
         return (s, covered, chosen), None
 
-    chosen0 = jnp.zeros((P, 24), bool)
+    chosen0 = jnp.zeros((P, NC), bool)
     covered0 = jnp.zeros((P,), jnp.int32)
+    # every winning merge covers >= 2 uncovered partitions, so np_ // 2
+    # rounds always reach the fixed point
     (saving, covered, chosen), _ = jax.lax.scan(
-        step, (saving0, covered0, chosen0), None, length=4
+        step, (saving0, covered0, chosen0), None, length=np_ // 2
     )
-    single_bit = 1 << jnp.arange(8, dtype=jnp.int32)
-    leftover = nonempty[:, :8] & ((covered[:, None] & single_bit[None, :]) == 0)
-    chosen = chosen.at[:, :8].set(chosen[:, :8] | leftover)
+    single_bit = 1 << jnp.arange(np_, dtype=jnp.int32)
+    leftover = nonempty[:, :np_] & (
+        (covered[:, None] & single_bit[None, :]) == 0
+    )
+    chosen = chosen.at[:, :np_].set(chosen[:, :np_] | leftover)
     return chosen
 
 
@@ -157,3 +177,85 @@ def dpm_plan_weighted(
         include_source_leg=include_source_leg, interpret=interpret,
     )
     return _greedy_merge(costs, reps), costs, reps
+
+
+# ---------------------------------------------------------------------------
+# Generic-topology path: 3-D meshes/tori (26 wedges) and chiplet packages
+# route their geometry through host-built lookup tables instead of the
+# closed-form 2-D coordinate math baked into the Pallas kernels above.
+# ---------------------------------------------------------------------------
+def partition_membership(g, srcs) -> np.ndarray:
+    """(len(srcs), NN) int32 wedge id of every node w.r.t. each source.
+
+    Entry ``[p, v]`` is the basic-partition index of node ``v`` under
+    packet ``p``'s source (``core.partition.wedge_patterns`` order over
+    sign patterns of ``Topology.delta``), or -1 at the source itself —
+    the membership table ``dpm_plan_topo`` selects candidates from.
+    """
+    nodes = g.nodes()
+    ndim = len(nodes[0])
+    index = {p: i for i, p in enumerate(wedge_patterns(ndim))}
+    out = np.full((len(srcs), g.num_nodes), -1, np.int32)
+    for pi, src in enumerate(srcs):
+        for v in nodes:
+            dv = g.delta(src, v)
+            sign = tuple((x > 0) - (x < 0) for x in dv)
+            out[pi, g.idx(v)] = index.get(sign, -1)
+    return out
+
+
+def snake_labels(g) -> np.ndarray:
+    """(NN,) int32 boustrophedon label per node, ``Topology.idx`` order."""
+    return np.array([g.label(*c) for c in g.nodes()], np.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("np_", "overhead", "include_source_leg")
+)
+def dpm_plan_topo(
+    part_of: jax.Array,  # (P, NN) int32 membership (partition_membership)
+    src_idx: jax.Array,  # (P,) int32 Topology.idx of each source
+    labels: jax.Array,  # (NN,) int32 snake labels (snake_labels)
+    dist: jax.Array,  # (NN, NN) provider-route hop counts
+    weight: jax.Array,  # (NN, NN) provider-route prices
+    *,
+    np_: int,
+    overhead: float = 0.0,
+    include_source_leg: bool = True,
+):
+    """Algorithm 1 batched on *any* registered topology.
+
+    The geometry enters as data: wedge membership (masking non-destinations
+    with -1), snake labels, and the ``(dist, weight, overhead)`` route-cost
+    tensors of ``repro.core.routefn.route_cost_matrices`` — so 3-D meshes,
+    tori, and chiplet packages (including degraded/weighted fabrics) batch
+    on device with no kernel-side coordinate math. ``np_`` is
+    ``len(core.partition.wedge_patterns(ndim))``: 8 in 2-D, 26 in 3-D.
+    Returns (chosen (P, 3*np_) bool, costs (P, 3*np_) f32,
+    reps (P, 3*np_) i32), candidate axis in ``candidate_ids_for`` order.
+    """
+    cands = candidate_ids_for(np_)
+    dist = dist.astype(jnp.int32)
+    weight = weight.astype(jnp.float32)
+    dsrc = jnp.take(dist, src_idx, axis=0)  # (P, NN)
+    w_src = jnp.take(weight, src_idx, axis=0)
+    costs, reps = [], []
+    for ids in cands:
+        sel = part_of == ids[0]
+        for i in ids[1:]:
+            sel = sel | (part_of == i)
+        any_sel = sel.any(1)
+        # Definition 1 representative: min (dist-to-src, label)
+        key = jnp.where(sel, dsrc * BIG + labels[None], jnp.int32(2**30))
+        rep = jnp.argmin(key, 1).astype(jnp.int32)
+        w_rep = jnp.take(weight, rep, axis=0)  # (P, NN) prices from rep
+        cnt = jnp.sum(sel.astype(jnp.float32), 1)
+        ct = jnp.sum(jnp.where(sel, w_rep, 0.0), 1)
+        ct = ct + jnp.maximum(cnt - 1.0, 0.0) * float(overhead)
+        if include_source_leg:
+            ct = ct + jnp.take_along_axis(w_src, rep[:, None], 1)[:, 0]
+        costs.append(jnp.where(any_sel, ct, 0.0))
+        reps.append(jnp.where(any_sel, rep, -1))
+    costs = jnp.stack(costs, 1)
+    reps = jnp.stack(reps, 1)
+    return _greedy_merge(costs, reps, np_), costs, reps

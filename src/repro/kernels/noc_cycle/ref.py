@@ -265,12 +265,13 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     req_np = req[node_ports]  # (NN, PORTS)
     key_np = key[node_ports]
     adm_np = adm[node_ports]
+    D = L // NN  # output ports per router (4 in 2-D, 6 in 3-D)
     out_link = (
-        jnp.arange(NN, dtype=jnp.int32)[:, None] * 4
-        + jnp.arange(4, dtype=jnp.int32)[None, :]
-    )  # (NN, 4) == link-id layout
+        jnp.arange(NN, dtype=jnp.int32)[:, None] * D
+        + jnp.arange(D, dtype=jnp.int32)[None, :]
+    )  # (NN, D) == link-id layout
     m = adm_np[:, None, :] & (req_np[:, None, :] == out_link[:, :, None])
-    kk = jnp.where(m, key_np[:, None, :], INF)  # (NN, 4, PORTS)
+    kk = jnp.where(m, key_np[:, None, :], INF)  # (NN, D, PORTS)
     wport = jnp.argmin(kk, axis=2).astype(jnp.int32)
     aval = (
         jnp.take_along_axis(kk, wport[:, :, None], axis=2)[:, :, 0] < INF
@@ -282,7 +283,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     astage = to_c[wcand]
     afid = fid_c[wcand]
     avc = tvc_c[wcand]
-    from_lane = (wport >= 4 * W).reshape(L) & aval
+    from_lane = (wport >= D * W).reshape(L) & aval
     # map winners back to candidates through the static inverse (gather)
     won = (
         adm & (req >= 0)
@@ -379,7 +380,7 @@ def cycle_core(state: CycleState, tb: dict, t: jax.Array, geom: dict, *,
     nreq = jnp.sum(
         (req_np[:, None, :] == out_link[:, :, None]).astype(jnp.int32),
         axis=2,
-    )  # (NN, 4) requests per output link, admissible or not (host parity)
+    )  # (NN, D) requests per output link, admissible or not (host parity)
     conf_n = jnp.sum(jnp.maximum(nreq - 1, 0), axis=1)  # (NN,)
     rconf = rconf + eh[:, None] * conf_n[None, :]
 

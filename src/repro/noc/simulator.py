@@ -108,7 +108,7 @@ class WormholeSim:
     def __init__(self, cfg: NoCConfig, measure_window: tuple[int, int] | None = None):
         self.cfg = cfg
         self.g: MeshGrid = make_topology(
-            cfg.topology, cfg.n, cfg.m, cfg.broken_links
+            cfg.topology, cfg.n, cfg.m, cfg.broken_links, cfg.topology_params
         )
         self.packets: list[_Pkt] = []
         self.fifos: dict[Link, list[deque]] = {}  # link -> per-VC FIFOs
@@ -116,7 +116,8 @@ class WormholeSim:
         self.src_queues: dict[tuple[Coord, int], deque] = {}
         self.stats = SimStats(
             telemetry=Telemetry(
-                self.g.num_nodes, cfg.vcs_per_class, cfg.epoch_len
+                self.g.num_nodes, cfg.vcs_per_class, cfg.epoch_len,
+                ports=getattr(self.g, "ports", 4),
             )
         )
         self._lids: dict[Link, int] = {}  # link -> directed-link id memo

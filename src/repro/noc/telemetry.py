@@ -21,8 +21,10 @@ Three layers, host to device:
   calibrated model, replan, iterate to a fixed point.
 
 Directed-link ids use the engines' shared convention
-``idx(u) * 4 + direction(u -> v)`` with directions (+x, -x, +y, -y);
-``link_index``/``link_coords`` convert both ways.
+``idx(u) * ports + direction(u -> v)`` — the direction order and port count
+come from the topology (4 on the 2-D kinds with (+x, -x, +y, -y), 6 on the
+3-D ones with (+z, -z) appended); ``link_index``/``link_coords`` convert
+both ways.
 """
 from __future__ import annotations
 
@@ -30,34 +32,27 @@ import numpy as np
 
 from ..core.grid import Coord, MeshGrid
 
-# direction index convention shared with xsim.compile / noc_cycle geometry
-_DIRS: dict[Coord, int] = {(1, 0): 0, (-1, 0): 1, (0, 1): 2, (0, -1): 3}
-_DELTAS: tuple[Coord, ...] = ((1, 0), (-1, 0), (0, 1), (0, -1))
-
 LATENCY_BINS = 21  # log2 buckets: [1,2), [2,4), ... [2^19, 2^20), overflow
 
 
 def link_index(g: MeshGrid, u: Coord, v: Coord) -> int:
-    """Directed-link id of u -> v: ``idx(u) * 4 + direction``.
+    """Directed-link id of u -> v: ``idx(u) * ports + direction``.
 
     Shared with the xsim compiler and the fused-cycle geometry tables, so
     host telemetry rows and device utilization planes index identically.
     Torus wrap hops resolve through ``Topology.delta``'s signed shortest
-    step, like every other consumer of the convention.
+    step, like every other consumer of the convention; non-links (including
+    undeclared chiplet-boundary crossings) raise ValueError.
     """
-    dx, dy = g.delta(u, v)
-    d = _DIRS.get((dx, dy))
-    if d is None:
-        raise ValueError(f"({u}, {v}) is not a single-hop link")
-    return g.idx(u) * 4 + d
+    return g.idx(u) * getattr(g, "ports", 4) + g.direction(u, v)
 
 
 def link_coords(g: MeshGrid, link_id: int) -> tuple[Coord, Coord]:
     """Inverse of ``link_index`` (canonical coordinates on a torus)."""
-    node, d = divmod(int(link_id), 4)
-    y, x = divmod(node, g.n)
-    dx, dy = _DELTAS[d]
-    return (x, y), g.normalize(x + dx, y + dy)
+    node, d = divmod(int(link_id), getattr(g, "ports", 4))
+    u = g.from_idx(node)
+    dd = g.dir_delta(d)
+    return u, g.normalize(*(c + e for c, e in zip(u, dd)))
 
 
 class LatencyHistogram:
@@ -109,11 +104,12 @@ class Telemetry:
     """
 
     def __init__(self, num_nodes: int, vcs_per_class: int,
-                 epoch_len: int = 128) -> None:
+                 epoch_len: int = 128, ports: int = 4) -> None:
         if epoch_len < 1:
             raise ValueError(f"epoch_len must be >= 1 (got {epoch_len})")
         self.num_nodes = num_nodes
-        self.num_links = num_nodes * 4
+        self.ports = ports
+        self.num_links = num_nodes * ports
         self.vcs = 2 * vcs_per_class
         self.vcs_per_class = vcs_per_class
         self.epoch_len = epoch_len
@@ -185,11 +181,11 @@ class Telemetry:
 
     def router_conflicts(self) -> np.ndarray:
         """(NN,) conflicts per router (a link arbitrates at its source)."""
-        return self.link_conflicts.reshape(self.num_nodes, 4).sum(axis=1)
+        return self.link_conflicts.reshape(self.num_nodes, self.ports).sum(axis=1)
 
     def heatmap(self, g: MeshGrid) -> np.ndarray:
-        """(rows, n, 4) per-node outgoing-link flit counts for rendering."""
-        return self.link_flits.reshape(g.rows, g.n, 4).copy()
+        """(rows, n, ports) per-node outgoing-link flit counts for rendering."""
+        return self.link_flits.reshape(g.rows, g.n, self.ports).copy()
 
     def to_dict(self) -> dict:
         """JSON-ready snapshot (timeline artifacts, benchmark exports)."""
@@ -240,14 +236,15 @@ class MeasuredContentionCost(CostModel):
                  lam: float = 1.0,
                  prev: "MeasuredContentionCost | None" = None):
         util = np.asarray(utilization, np.float64)
-        if util.shape != (g.num_nodes * 4,):
+        ports = getattr(g, "ports", 4)
+        if util.shape != (g.num_nodes * ports,):
             raise ValueError(
-                f"utilization must be ({g.num_nodes * 4},) directed-link "
+                f"utilization must be ({g.num_nodes * ports},) directed-link "
                 f"flit counts (got {util.shape})"
             )
         peak = float(util.max(initial=0.0))
         self.lam = float(lam)
-        self.fabric = (g.kind, g.n, g.rows)
+        self.fabric = (g.kind, g.n, g.rows, getattr(g, "params", ()))
         raw = (
             1.0 + self.lam * util / peak if peak > 0
             else np.ones_like(util)
@@ -258,10 +255,10 @@ class MeasuredContentionCost(CostModel):
             self.weights = np.where(keep, prev.weights, self.weights)
 
     def _check(self, g: MeshGrid) -> None:
-        if (g.kind, g.n, g.rows) != self.fabric:
+        fab = (g.kind, g.n, g.rows, getattr(g, "params", ()))
+        if fab != self.fabric:
             raise ValueError(
-                f"cost model calibrated for {self.fabric} cannot price "
-                f"{(g.kind, g.n, g.rows)}"
+                f"cost model calibrated for {self.fabric} cannot price {fab}"
             )
 
     def link_cost(self, g: MeshGrid, u: Coord, v: Coord) -> float:
@@ -427,10 +424,9 @@ def calibrate_cost_model(
     measured ``EnergyCost`` constants fitted from the same run's event
     counters (``fit_energy_cost``).
     """
-    from ..core.topology import make_topology
     from .xsim import xsimulate
 
-    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    topo = cfg.make_topology()
 
     def run(cost_model):
         res = xsimulate(
@@ -499,7 +495,8 @@ def calibrate_cost_model(
         # hop-objective baseline's plans (and latency) are reproduced
         best = 0
         model = MeasuredContentionCost(
-            topo, np.zeros(topo.num_nodes * 4), lam=lam
+            topo, np.zeros(topo.num_nodes * getattr(topo, "ports", 4)),
+            lam=lam,
         )
     else:
         model = models[best]

@@ -213,7 +213,9 @@ def replay_host(
     ``cfg.broken_links`` from that phase onward (``_resolve_phase_faults``)
     — each affected phase plans and runs on its own degraded topology, and
     the telemetry timeline shows the degradation step."""
-    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    topo = make_topology(
+        cfg.topology, cfg.n, cfg.m, cfg.broken_links, cfg.topology_params
+    )
     _check_fits(tr, topo)
     faults = _resolve_phase_faults(tr, phase_broken_links)
     cycles, deliveries = [], []
@@ -224,7 +226,8 @@ def replay_host(
             else dataclasses.replace(cfg, broken_links=flt)
         )
         ptopo = make_topology(
-            pcfg.topology, pcfg.n, pcfg.m, pcfg.broken_links
+            pcfg.topology, pcfg.n, pcfg.m, pcfg.broken_links,
+            pcfg.topology_params,
         )
         sim = WormholeSim(pcfg)
         for r in _phase_requests(ph, topo, flit_bytes, max_flits):
@@ -294,7 +297,9 @@ def replay_xsim(
     a mid-trace link failure still runs in the one batched dispatch."""
     from ..xsim import xsimulate
 
-    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    topo = make_topology(
+        cfg.topology, cfg.n, cfg.m, cfg.broken_links, cfg.topology_params
+    )
     _check_fits(tr, topo)
     faults = _resolve_phase_faults(tr, phase_broken_links)
     workloads = [

@@ -9,9 +9,11 @@ delivery sets directly.
 Per-packet scalars and per-stage tables (stage ``s`` is the input FIFO at
 ``hops[s+1]`` fed by directed link ``(hops[s], hops[s+1])``):
 
-* ``link[P, S]``    directed-link id ``idx(u) * 4 + direction(u -> v)``
-                    (directions: +x, -x, +y, -y; torus wrap hops resolve
-                    through ``Topology.delta``'s signed shortest step).
+* ``link[P, S]``    directed-link id ``idx(u) * ports + direction(u -> v)``
+                    (direction order and port count from the topology: the
+                    2-D kinds use (+x, -x, +y, -y), the 3-D ones append
+                    (+z, -z); torus wrap hops resolve through
+                    ``Topology.delta``'s signed shortest step).
 * ``vcls[P, S]``    VC class of the hop — HIGH(0) iff the boustrophedon
                     label increases along it (core.grid labeling, the
                     paper's dual-path deadlock rule, same as the host sim).
@@ -52,10 +54,12 @@ class CompiledTraffic:
 
     # static geometry / config
     n: int
-    m: int
+    m: int  # the topology factory's m argument (y extent; == rows in 2-D)
     kind: str
+    params: tuple  # extra make_topology args (Topology.params)
+    ports: int  # output ports per router (4 in 2-D, 6 in 3-D)
     num_nodes: int
-    num_links: int  # directed-link id space: num_nodes * 4
+    num_links: int  # directed-link id space: num_nodes * ports
     horizon: int
     # per-packet (P,)
     enqueue: np.ndarray  # int32; NEVER on padding rows
@@ -120,7 +124,10 @@ def compile_workload(
     a route crossing a broken link is refused before any tensor is built
     (the same contract as ``WormholeSim.add_plan``).
     """
-    g = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    g = make_topology(
+        cfg.topology, cfg.n, cfg.m, cfg.broken_links, cfg.topology_params
+    )
+    ports = getattr(g, "ports", 4)
     rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid, flits)
     for r in workload.requests:
         pl_ = plan(algo, g, r.src, r.dests, cost_model=cost_model)
@@ -176,10 +183,8 @@ def compile_workload(
         enq_l.append(t)
         par_l.append(-1 if par is None else par)
         fl_l.append(nf)
-        x0, y0 = hops[0]
-        lane_l.append((y0 * n + x0) * 2 + (0 if par is None else 1))
-        xe, ye = hops[-1]
-        ej_l.append(ye * n + xe)
+        lane_l.append(g.idx(hops[0]) * 2 + (0 if par is None else 1))
+        ej_l.append(g.idx(hops[-1]))
         for d in deliveries:
             del_p.append(pid)
             del_s.append(hops.index(d, 1) - 1)
@@ -194,26 +199,39 @@ def compile_workload(
         eject_node[:P] = ej_l
         valid[:P] = True
         deliver[del_p, del_s] = True
-        hv = np.fromiter(
-            (c for xy in flat_uv for c in xy), np.int64, 2 * len(flat_uv)
-        ).reshape(-1, 2)  # all hops, path-concatenated
-        starts = np.cumsum(lens + 1) - (lens + 1)  # path offsets incl. hop 0
-        total = int(lens.sum())
-        pidx = np.repeat(np.arange(P), lens)
-        sidx = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
-        flat = np.repeat(starts, lens) + sidx  # index of hop u of (pid, s)
-        ux, uy = hv[flat, 0], hv[flat, 1]
-        vx, vy = hv[flat + 1, 0], hv[flat + 1, 1]
-        dx, dy = vx - ux, vy - uy
-        if g.wrap:  # signed shortest step (matches Topology.delta)
-            dx = (dx + n // 2) % n - n // 2
-            dy = (dy + m // 2) % m - m // 2
-        dir_ = np.select([dx == 1, dx == -1, dy == 1], [0, 1, 2], default=3)
-        labu = np.where(uy % 2 == 0, uy * n + ux, uy * n + n - 1 - ux)
-        labv = np.where(vy % 2 == 0, vy * n + vx, vy * n + n - 1 - vx)
-        link[pidx, sidx] = (uy * n + ux) * 4 + dir_
-        vcls[pidx, sidx] = labv < labu  # 0 HIGH (label up), 1 LOW
-        node[pidx, sidx] = vy * n + vx
+        if g.kind in ("mesh", "torus"):
+            # vectorized 2-D lowering — the hot path on big sweeps, kept
+            # bit-identical to the original closed-form snake/direction math
+            hv = np.fromiter(
+                (c for xy in flat_uv for c in xy), np.int64, 2 * len(flat_uv)
+            ).reshape(-1, 2)  # all hops, path-concatenated
+            starts = np.cumsum(lens + 1) - (lens + 1)  # offsets incl. hop 0
+            total = int(lens.sum())
+            pidx = np.repeat(np.arange(P), lens)
+            sidx = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+            flat = np.repeat(starts, lens) + sidx  # index of hop u of (pid, s)
+            ux, uy = hv[flat, 0], hv[flat, 1]
+            vx, vy = hv[flat + 1, 0], hv[flat + 1, 1]
+            dx, dy = vx - ux, vy - uy
+            if g.wrap:  # signed shortest step (matches Topology.delta)
+                dx = (dx + n // 2) % n - n // 2
+                dy = (dy + m // 2) % m - m // 2
+            dir_ = np.select(
+                [dx == 1, dx == -1, dy == 1], [0, 1, 2], default=3
+            )
+            labu = np.where(uy % 2 == 0, uy * n + ux, uy * n + n - 1 - ux)
+            labv = np.where(vy % 2 == 0, vy * n + vx, vy * n + n - 1 - vx)
+            link[pidx, sidx] = (uy * n + ux) * 4 + dir_
+            vcls[pidx, sidx] = labv < labu  # 0 HIGH (label up), 1 LOW
+            node[pidx, sidx] = vy * n + vx
+        else:
+            # generic lowering through the Topology protocol (3-D, chiplet,
+            # any future registered kind): per-hop loops, same semantics
+            for pid, (hops, _dv, _t, _par, _nf) in enumerate(rows):
+                for s, (u, v) in enumerate(zip(hops, hops[1:])):
+                    link[pid, s] = g.idx(u) * ports + g.direction(u, v)
+                    vcls[pid, s] = g.label(*v) < g.label(*u)
+                    node[pid, s] = g.idx(v)
 
     # static per-lane injection order for roots: (enqueue, pid) — the host
     # sim's FIFO arrival order (roots enter their queue at enqueue time).
@@ -267,9 +285,11 @@ def compile_workload(
     max_f = max(cfg.flits_per_packet, int(flits[valid].max(initial=1)))
     max_key = (int(enqueue[valid].max(initial=0)) + 1) * Pp * max_f
     assert max_key < 2**30, f"workload too large for int32 age keys ({max_key})"
+    m_fact = getattr(g, "m", None)
     return CompiledTraffic(
-        n=g.n, m=g.rows, kind=g.kind,
-        num_nodes=g.num_nodes, num_links=g.num_nodes * 4,
+        n=g.n, m=g.rows if m_fact is None else m_fact, kind=g.kind,
+        params=getattr(g, "params", ()), ports=ports,
+        num_nodes=g.num_nodes, num_links=g.num_nodes * ports,
         horizon=workload.horizon,
         enqueue=enqueue, parent=parent, release_stage=release_stage,
         lane=lane, num_stages=num_stages, flits=flits,
@@ -282,51 +302,51 @@ def compile_workload(
 
 
 @functools.lru_cache(maxsize=64)
-def geometry_tables(kind: str, n: int, m: int, V: int) -> dict[str, np.ndarray]:
+def geometry_tables(
+    kind: str, n: int, m: int, params: tuple, V: int
+) -> dict[str, np.ndarray]:
     """Static router geometry for the fused cycle kernel (numpy, topology-only).
 
     The fused engine's candidate space is every VC FIFO plus every NI lane,
     flattened: FIFO ``(l, v)`` is candidate ``l * W + v`` (``W = 2V`` VCs per
     directed link), lane ``q`` is candidate ``L * W + q``, and one trailing
     dummy candidate ``L * W + 2 * NN`` absorbs padding. Arbitration is a
-    dense masked min over ``node_ports[v]`` — the FIFOs of the four links
+    dense masked min over ``node_ports[v]`` — the FIFOs of the ``D`` links
     *into* node ``v`` (a flit can only request ``v``'s output links from
-    there) plus ``v``'s two NI lanes — so each candidate appears in exactly
-    one node's port list and winner masks map back through the static
-    ``cand_node``/``cand_port`` inverse with a gather, never a scatter.
+    there; ``D = Topology.ports``) plus ``v``'s two NI lanes — so each
+    candidate appears in exactly one node's port list and winner masks map
+    back through the static ``cand_node``/``cand_port`` inverse with a
+    gather, never a scatter.
+
+    Tables enumerate the *healthy* topology (``params`` but no faults): the
+    cycle engine is fault-agnostic — broken links are excluded at plan time,
+    so no compiled route ever requests them.
     """
-    NN = n * m
-    L = NN * 4
+    g = make_topology(kind, n, m, params=params)
+    NN = g.num_nodes
+    D = getattr(g, "ports", 4)
+    L = NN * D
     W = 2 * V
-    PORTS = 4 * W + 2
+    PORTS = D * W + 2
     CAND = L * W + 2 * NN
-    wrap = kind == "torus"
-    # deltas per direction index (+x, -x, +y, -y) — the link-id convention
-    DX = (1, -1, 0, 0)
-    DY = (0, 0, 1, -1)
     node_ports = np.full((NN, PORTS), CAND, np.int32)  # CAND = dummy pad
     cand_node = np.zeros(CAND + 1, np.int32)
     cand_port = np.zeros(CAND + 1, np.int32)
-    for vy in range(m):
-        for vx in range(n):
-            v = vy * n + vx
-            for d in range(4):
-                ux, uy = vx - DX[d], vy - DY[d]
-                if wrap:
-                    ux, uy = ux % n, uy % m
-                elif not (0 <= ux < n and 0 <= uy < m):
-                    continue
-                link = (uy * n + ux) * 4 + d
-                for w in range(W):
-                    cand = link * W + w
-                    node_ports[v, d * W + w] = cand
-                    cand_node[cand] = v
-                    cand_port[cand] = d * W + w
-            for q in range(2):
-                cand = L * W + 2 * v + q
-                node_ports[v, 4 * W + q] = cand
+    for vc in g.nodes():
+        v = g.idx(vc)
+        for uc in g.neighbors(*vc):
+            d = g.direction(uc, vc)  # incoming link u -> v enters on port d
+            link = g.idx(uc) * D + d
+            for w in range(W):
+                cand = link * W + w
+                node_ports[v, d * W + w] = cand
                 cand_node[cand] = v
-                cand_port[cand] = 4 * W + q
+                cand_port[cand] = d * W + w
+        for q in range(2):
+            cand = L * W + 2 * v + q
+            node_ports[v, D * W + q] = cand
+            cand_node[cand] = v
+            cand_port[cand] = D * W + q
     return {
         "node_ports": node_ports,
         "cand_node": cand_node,
@@ -365,7 +385,7 @@ def stack_traffic(
     """
     t0 = traffics[0]
     for t in traffics[1:]:
-        if (t.n, t.m, t.kind) != (t0.n, t0.m, t0.kind):
+        if (t.n, t.m, t.kind, t.params) != (t0.n, t0.m, t0.kind, t0.params):
             raise ValueError("cannot batch traffic across different topologies")
     Pp = max(t.enqueue.shape[0] for t in traffics)
     Sp = max(t.max_stages for t in traffics)
@@ -383,7 +403,8 @@ def stack_traffic(
         dc = Cp - t.child_parent.shape[0]
         padc = lambda a, fill: np.pad(a, (0, dc), constant_values=fill)
         return CompiledTraffic(
-            n=t.n, m=t.m, kind=t.kind, num_nodes=t.num_nodes,
+            n=t.n, m=t.m, kind=t.kind, params=t.params, ports=t.ports,
+            num_nodes=t.num_nodes,
             num_links=t.num_links, horizon=t.horizon,
             enqueue=pad1(t.enqueue, NEVER), parent=pad1(t.parent, -1),
             release_stage=pad1(t.release_stage, -1), lane=pad1(t.lane, 0),

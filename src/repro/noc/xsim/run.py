@@ -42,9 +42,9 @@ from .step import CTR, run_cycles
 
 
 def _run_one(tr: dict, T: int, F: int, V: int, BD: int, L: int, NN: int,
-             ND: int, kind: str, n: int, m: int, backend: str,
+             ND: int, kind: str, n: int, m: int, params: tuple, backend: str,
              epoch_len: int | None = None):
-    geom = geometry_tables(kind, n, m, V)
+    geom = geometry_tables(kind, n, m, params, V)
     return run_cycles(
         tr, geom, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, backend=backend,
         epoch_len=epoch_len,
@@ -54,16 +54,16 @@ def _run_one(tr: dict, T: int, F: int, V: int, BD: int, L: int, NN: int,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "T", "F", "V", "BD", "L", "NN", "ND", "kind", "n", "m", "backend",
-        "epoch_len",
+        "T", "F", "V", "BD", "L", "NN", "ND", "kind", "n", "m", "params",
+        "backend", "epoch_len",
     ),
 )
 def _run_batch(stacked: dict, T: int, F: int, V: int, BD: int, L: int,
-               NN: int, ND: int, kind: str, n: int, m: int, backend: str,
-               epoch_len: int):
+               NN: int, ND: int, kind: str, n: int, m: int, params: tuple,
+               backend: str, epoch_len: int):
     fn = functools.partial(
         _run_one, T=T, F=F, V=V, BD=BD, L=L, NN=NN, ND=ND, kind=kind, n=n,
-        m=m, backend=backend, epoch_len=epoch_len,
+        m=m, params=params, backend=backend, epoch_len=epoch_len,
     )
     return jax.vmap(fn)(stacked)
 
@@ -193,10 +193,11 @@ class XSimResults:
         return planes.sum(axis=0) if epoch is None else planes[epoch]
 
     def link_heatmap(self, w: int, a: int) -> np.ndarray:
-        """(rows, n, 4) per-node outgoing-link flit counts (rendering)."""
-        return self.link_utilization(w, a).reshape(
-            self.cfg.rows, self.cfg.n, 4
-        )
+        """(rows, n, ports) per-node outgoing-link flit counts (rendering)."""
+        util = self.link_utilization(w, a)
+        rows = self.cfg.rows
+        ports = util.shape[-1] // (rows * self.cfg.n)
+        return util.reshape(rows, self.cfg.n, ports)
 
     def stats(self, w: int, a: int) -> SimStats:
         b = self._b(w, a)
@@ -247,7 +248,9 @@ def xsimulate(
     fault-agnostic; trace replay uses this for mid-run link failures).
     """
     del slots  # legacy slot-pool hint: capacity is structural now
-    topo = make_topology(cfg.topology, cfg.n, cfg.m, cfg.broken_links)
+    topo = make_topology(
+        cfg.topology, cfg.n, cfg.m, cfg.broken_links, cfg.topology_params
+    )
     if algos is None:
         algos = tuple(available_algorithms(topo))
     resolved = [get_algorithm(a) for a in algos]
@@ -296,7 +299,7 @@ def xsimulate(
         stacked_j,
         T=T, F=F, V=cfg.vcs_per_class,
         BD=cfg.buffer_depth, L=ref.num_links, NN=ref.num_nodes, ND=ND,
-        kind=ref.kind, n=ref.n, m=ref.m, backend=backend,
+        kind=ref.kind, n=ref.n, m=ref.m, params=ref.params, backend=backend,
         epoch_len=epoch_len,
     )
     out = jax.tree_util.tree_map(np.asarray, out)  # blocks until ready

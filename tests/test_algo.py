@@ -79,7 +79,9 @@ def test_unknown_algorithm_error_lists_registered():
         get_algorithm("NOPE")
     with pytest.raises(KeyError, match="MU, DP, MP, NMP, DPM, DPM-E"):
         plan("NOPE", G8, (0, 0), [(1, 1)])
-    with pytest.raises(KeyError, match="registered: hops, contention, energy"):
+    with pytest.raises(
+        KeyError, match="registered: hops, contention, weighted, energy"
+    ):
         get_cost_model("joules")
 
 

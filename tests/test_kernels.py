@@ -405,7 +405,9 @@ def _cycle_fixture(cfg, rate, cycles, seed, algo):
     tb = {
         f: jnp.asarray(stacked[f][0]) for f in R.TABLE_FIELDS
     }
-    geom = geometry_tables(refm.kind, refm.n, refm.m, cfg.vcs_per_class)
+    geom = geometry_tables(
+        refm.kind, refm.n, refm.m, refm.params, cfg.vcs_per_class
+    )
     params = dict(
         F=cfg.flits_per_packet, V=cfg.vcs_per_class, BD=cfg.buffer_depth,
         L=refm.num_links, NN=refm.num_nodes,

@@ -292,3 +292,96 @@ def test_dpm_plan_wrap_covers_nonempty_partitions():
             assert cover & bits[ci] & nonempty == 0  # disjoint
             cover |= bits[ci]
         assert cover & nonempty == nonempty  # exact cover
+
+
+# ------------------------------------------- conformance (all registered kinds)
+# Property suite over every registered topology kind: any new kind must add a
+# representative fabric here, and the coverage test fails until it does. Uses
+# hypothesis (or the conftest shim) with integer seeds only — the shim's
+# @given wrapper takes no pytest-injected parameters, so kinds are looped
+# inside each property body.
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.topo3d import chiplet, mesh3d, torus3d  # noqa: E402
+from repro.core.topology import registered_topology_kinds  # noqa: E402
+
+FABRICS = {
+    "mesh": grid(5, 4),
+    "torus": torus(5, 4),
+    "mesh3d": mesh3d(3, 4, 2),
+    "torus3d": torus3d(3, 4, 3),
+    "chiplet": chiplet(8, 8, 2, 2),
+}
+_SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def test_conformance_fabrics_cover_all_registered_kinds():
+    assert set(FABRICS) == set(registered_topology_kinds())
+    for kind, g in FABRICS.items():
+        assert g.kind == kind
+
+
+@given(_SEED)
+@settings(max_examples=60)
+def test_conformance_label_unlabel_roundtrip(seed):
+    for g in FABRICS.values():
+        lab = seed % g.num_nodes
+        c = g.unlabel(lab)
+        assert g.label(*c) == lab
+        i = (seed * 7919 + 13) % g.num_nodes
+        assert g.idx(g.from_idx(i)) == i
+
+
+@given(_SEED)
+@settings(max_examples=60)
+def test_conformance_snake_successor_is_neighbor(seed):
+    """The label order is a Hamiltonian path — consecutive labels are
+    physically adjacent, which is what makes label-monotone dual-path
+    routing deadlock-free on every fabric."""
+    for g in FABRICS.values():
+        lab = seed % (g.num_nodes - 1)
+        u, v = g.unlabel(lab), g.unlabel(lab + 1)
+        assert v in g.neighbors(*u)
+
+
+@given(_SEED, _SEED)
+@settings(max_examples=60)
+def test_conformance_delta_matches_distance(s1, s2):
+    for g in FABRICS.values():
+        a, b = g.unlabel(s1 % g.num_nodes), g.unlabel(s2 % g.num_nodes)
+        dv = g.delta(a, b)
+        # the signed displacement lands on b (modulo wrap)
+        assert g.normalize(*(c + d for c, d in zip(a, dv))) == b
+        l1 = sum(abs(d) for d in dv)
+        if g.kind == "chiplet":
+            # sparse NoI crossings: BFS distance prices the geometric
+            # displacement or more, never less
+            assert g.distance(a, b) >= l1
+        else:
+            assert g.distance(a, b) == l1
+        assert g.distance(a, b) == g.distance(b, a)
+        assert (g.distance(a, b) == 0) == (a == b)
+
+
+@given(_SEED)
+@settings(max_examples=60)
+def test_conformance_neighbors_symmetric(seed):
+    for g in FABRICS.values():
+        u = g.unlabel(seed % g.num_nodes)
+        ns = g.neighbors(*u)
+        assert len(ns) == len(set(ns)) and u not in ns
+        for v in ns:
+            assert u in g.neighbors(*v)
+            assert g.distance(u, v) == 1
+
+
+@given(_SEED, _SEED)
+@settings(max_examples=60)
+def test_conformance_normalize_idempotent(s1, s2):
+    for g in FABRICS.values():
+        c = g.unlabel(s1 % g.num_nodes)
+        assert g.normalize(*c) == c  # in-range coords are fixed points
+        off = (s2 % 7 - 3, (s2 // 7) % 7 - 3) + (0,) * (len(c) - 2)
+        w = g.normalize(*(x + k for x, k in zip(c, off)))
+        assert g.normalize(*w) == w

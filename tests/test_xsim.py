@@ -118,7 +118,8 @@ def test_xsim_pure_no_callbacks_and_vmap_stable_shapes():
         _run_one, T=50, F=cfg.flits_per_packet, V=cfg.vcs_per_class,
         BD=cfg.buffer_depth, L=cts[0].num_links, NN=cts[0].num_nodes,
         ND=int(cts[0].dslot.max()) + 1,
-        kind=cts[0].kind, n=cts[0].n, m=cts[0].m, backend="ref",
+        kind=cts[0].kind, n=cts[0].n, m=cts[0].m, params=cts[0].params,
+        backend="ref",
     )
     jaxpr = str(jax.make_jaxpr(fn)({k: jnp.asarray(v) for k, v in tr.items()}))
     assert "callback" not in jaxpr  # no host round-trips inside the scan
