@@ -1,0 +1,271 @@
+"""Batched plan-server throughput: device-side planning vs host plan().
+
+Protocol (ISSUE 10 tentpole gate):
+
+* serving-scale instance streams on the 8x8 mesh — random (src, dest-set)
+  requests at collective-style fanouts (8-24 destinations, the regime a
+  serving fabric actually multicasts at: activation broadcast / KV-shard
+  fan-out groups) — planned two ways: one ``plan()`` call per instance on
+  the host, and in one ``BatchPlanner.plan_many`` bulk dispatch (chunked
+  jitted ``dpm_plan_exact`` batches + host decode of arena misses).
+* every timing is arena-cold / plan-cache-cold per trial (caches cleared),
+  min of N trials (this container's wall clock is noisy); jit compilation
+  is warmed untimed — shared infrastructure, same treatment as the planner
+  cache warm-up in ``xsim_sweep``.
+* **bit-identity gate**: every batched plan on every benchmarked instance
+  is compared against host ``plan()`` — one mismatch fails the suite.
+* **perf gate** (full mode): batched planning >= 10x host plans/sec at
+  batch >= 1024, cold cache, at the headline fanout.
+* a fanout sweep shows where the gain comes from: host cost grows with the
+  destination count k, the device merge is k-independent (fixed candidate
+  tensors), so the speedup rises with fanout.
+* a cache-hit sweep re-plans a 1024-instance batch with a fraction of its
+  keys pre-warmed into the arena — the serving steady state where most
+  requests are hits and only the tail dispatches to the device.
+* a ``PlanServer`` section runs the same stream through the deadline-
+  batched streaming front-end (futures + background worker) to price the
+  queue/thread overhead over direct ``plan_many``.
+
+Writes ``results/planserve.json`` and the repo-root perf-trajectory
+artifact ``BENCH_planserve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import random
+import time
+
+CACHE = pathlib.Path(__file__).parent / "results" / "planserve.json"
+BENCH = pathlib.Path(__file__).parent.parent / "BENCH_planserve.json"
+
+MESH_N = 8
+HEADLINE_FANOUT = (8, 24)
+GATE_BATCH = 1024
+GATE_SPEEDUP = 10.0
+
+
+def _instances(g, count, seed, kmin, kmax):
+    nodes = g.nodes()
+    rng = random.Random(seed)
+    out, seen = [], set()
+    while len(out) < count:
+        src = rng.choice(nodes)
+        k = rng.randint(kmin, min(kmax, len(nodes) - 1))
+        dests = tuple(sorted(rng.sample([x for x in nodes if x != src], k)))
+        if (src, dests) in seen:
+            continue
+        seen.add((src, dests))
+        out.append((src, list(dests)))
+    return out
+
+
+def _host_rate(g, reqs, trials):
+    from repro.core import plan, plan_cache_clear
+
+    best = float("inf")
+    for _ in range(trials):
+        plan_cache_clear()
+        t0 = time.monotonic()
+        for src, dests in reqs:
+            plan("DPM", g, src, dests)
+        best = min(best, time.monotonic() - t0)
+    return len(reqs) / best, best
+
+
+def _batched_rate(bp, reqs, trials):
+    best = float("inf")
+    for _ in range(trials):
+        bp.clear()
+        t0 = time.monotonic()
+        plans = bp.plan_many(reqs)
+        best = min(best, time.monotonic() - t0)
+    return len(reqs) / best, best, plans
+
+
+def _assert_bit_identical(g, reqs, plans):
+    from repro.core import plan
+
+    bad = sum(
+        1 for (src, dests), p in zip(reqs, plans)
+        if p != plan("DPM", g, src, dests)
+    )
+    assert bad == 0, f"{bad}/{len(reqs)} batched plans differ from plan()"
+    return len(reqs)
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.core import BatchPlanner, grid, plan_cache_clear
+    from repro.serve import PlanServer
+
+    g = grid(MESH_N)
+    # min-of-trials: this container's wall clock jitters up to ~2x, and the
+    # gate compares two independent minima — full mode takes 5 trials so
+    # both sides get a clean (least-interference) sample
+    trials = 2 if quick else 5
+    batch_sizes = [1, 64, GATE_BATCH] if quick else [1, 16, 64, 256,
+                                                     GATE_BATCH, 4096]
+    fanouts = [HEADLINE_FANOUT] if quick else [(2, 12), HEADLINE_FANOUT,
+                                               (16, 32)]
+    hit_fracs = [0.0, 0.9] if quick else [0.0, 0.5, 0.9, 0.99]
+
+    bp = BatchPlanner(g, "DPM")
+    assert bp.support.ok, bp.support.reason
+    # warm every jit specialization the sweep will hit (pow2 pads + the
+    # DISPATCH_CHUNK shape), untimed — compile cost is not planning cost
+    for b in batch_sizes:
+        bp.clear()
+        bp.plan_many(_instances(g, min(b, 513), seed=999 + b,
+                                kmin=HEADLINE_FANOUT[0],
+                                kmax=HEADLINE_FANOUT[1]))
+
+    rows, verified = [], 0
+
+    # --- batch-size sweep at the headline fanout ------------------------
+    sweep = []
+    for b in batch_sizes:
+        reqs = _instances(g, b, seed=b, kmin=HEADLINE_FANOUT[0],
+                          kmax=HEADLINE_FANOUT[1])
+        h_rate, h_s = _host_rate(g, reqs, trials)
+        b_rate, b_s, plans = _batched_rate(bp, reqs, trials)
+        verified += _assert_bit_identical(g, reqs, plans)
+        speedup = b_rate / h_rate
+        sweep.append({
+            "batch": b,
+            "host_plans_per_s": int(h_rate),
+            "batched_plans_per_s": int(b_rate),
+            "host_s": round(h_s, 4),
+            "batched_s": round(b_s, 4),
+            "speedup": round(speedup, 2),
+        })
+        rows.append((f"planserve/batch_{b}", b_s * 1e6 / b,
+                     f"plans_per_s={int(b_rate)};host={int(h_rate)};"
+                     f"speedup=x{speedup:.2f}"))
+    headline = next(s for s in sweep if s["batch"] == GATE_BATCH)
+
+    # --- fanout sweep at the gate batch size ----------------------------
+    fan = []
+    for kmin, kmax in fanouts:
+        reqs = _instances(g, GATE_BATCH, seed=10 * kmin + kmax,
+                          kmin=kmin, kmax=kmax)
+        h_rate, _ = _host_rate(g, reqs, trials)
+        b_rate, _, plans = _batched_rate(bp, reqs, trials)
+        verified += _assert_bit_identical(g, reqs, plans)
+        fan.append({
+            "fanout": [kmin, kmax],
+            "host_plans_per_s": int(h_rate),
+            "batched_plans_per_s": int(b_rate),
+            "speedup": round(b_rate / h_rate, 2),
+        })
+        rows.append((f"planserve/fanout_{kmin}-{kmax}", 0.0,
+                     f"speedup=x{b_rate / h_rate:.2f};"
+                     f"batched={int(b_rate)};host={int(h_rate)}"))
+
+    # --- cache-hit sweep: serving steady state --------------------------
+    hits = []
+    reqs = _instances(g, GATE_BATCH, seed=77, kmin=HEADLINE_FANOUT[0],
+                      kmax=HEADLINE_FANOUT[1])
+    for frac in hit_fracs:
+        warm = reqs[: int(len(reqs) * frac)]
+        best = float("inf")
+        for _ in range(trials):
+            bp.clear()
+            if warm:
+                bp.plan_many(warm)
+            t0 = time.monotonic()
+            bp.plan_many(reqs)
+            best = min(best, time.monotonic() - t0)
+        rate = len(reqs) / best
+        hits.append({
+            "hit_fraction": frac,
+            "plans_per_s": int(rate),
+            "batch_s": round(best, 4),
+        })
+        rows.append((f"planserve/hits_{int(frac * 100)}pct",
+                     best * 1e6 / len(reqs), f"plans_per_s={int(rate)}"))
+
+    # --- PlanServer streaming front-end ---------------------------------
+    plan_cache_clear()
+    best = float("inf")
+    n_stream = 256 if quick else GATE_BATCH
+    stream = _instances(g, n_stream, seed=5, kmin=HEADLINE_FANOUT[0],
+                        kmax=HEADLINE_FANOUT[1])
+    with PlanServer(g, "DPM", max_wait_s=0.002, planner=bp) as ps:
+        for _ in range(trials):
+            bp.clear()
+            t0 = time.monotonic()
+            futs = [ps.submit(src, dests) for src, dests in stream]
+            for f in futs:
+                f.result(timeout=300)
+            best = min(best, time.monotonic() - t0)
+    server = {
+        "requests": n_stream,
+        "plans_per_s": int(n_stream / best),
+        "batches": ps.stats["batches"],
+        "note": "futures + deadline batching over the same arena; the "
+                "delta vs the direct plan_many rate is the queue/thread "
+                "overhead",
+    }
+    rows.append(("planserve/server_stream", best * 1e6 / n_stream,
+                 f"plans_per_s={server['plans_per_s']};"
+                 f"batches={ps.stats['batches']}"))
+
+    speedup = headline["speedup"]
+    if not quick:
+        assert speedup >= GATE_SPEEDUP, (
+            f"batched-planning perf gate: x{speedup:.2f} at batch "
+            f"{GATE_BATCH} (need >= x{GATE_SPEEDUP:.0f})"
+        )
+    rows.append(("planserve/gate", 0.0,
+                 f"speedup_at_{GATE_BATCH}=x{speedup:.2f};"
+                 f"bit_identical={verified};quick={quick}"))
+
+    env = {
+        "cpu_count": os.cpu_count(),
+        "jax_devices": jax.local_device_count(),
+        "backend": jax.default_backend(),
+    }
+    data = {
+        "mesh": f"{MESH_N}x{MESH_N}",
+        "algo": "DPM",
+        "headline_fanout": list(HEADLINE_FANOUT),
+        "trials": trials,
+        "methodology": "min-of-trials wall clock; plan cache and arena "
+                       "cleared per trial (cold); jit warmed untimed; "
+                       "every batched plan compared to host plan() for "
+                       "bit-identity",
+        "batch_sweep": sweep,
+        "fanout_sweep": fan,
+        "cache_hit_sweep": hits,
+        "plan_server": server,
+        "bit_identical_instances": verified,
+        "speedup_note": (
+            "host plan() cost grows with destination count k while the "
+            "device merge is k-independent (fixed candidate tensors), so "
+            "the speedup rises with fanout; measured on this container — "
+            "see env.cpu_count (decode and device compute cannot overlap "
+            "on one core)"
+        ),
+        "env": env,
+    }
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(data, indent=1))
+    BENCH.write_text(json.dumps({
+        "suite": "benchmarks.planserve",
+        "quick": quick,
+        "headline": {
+            "batch": GATE_BATCH,
+            "fanout": list(HEADLINE_FANOUT),
+            "host_plans_per_s": headline["host_plans_per_s"],
+            "batched_plans_per_s": headline["batched_plans_per_s"],
+            "speedup_cold_cache": speedup,
+        },
+        "gate": {"min_speedup": GATE_SPEEDUP,
+                 "passed": bool(speedup >= GATE_SPEEDUP)},
+        "bit_identical_instances": verified,
+        "env": env,
+    }, indent=1))
+    return rows

@@ -20,7 +20,7 @@ def main() -> None:
         default=None,
         help="comma-separated module names "
         "(fig6,fig7,fig8,partition,tpu,torus,kernels,dist,xsim,fault,trace,"
-        "telemetry,topo3d)",
+        "telemetry,topo3d,planserve)",
     )
     ap.add_argument(
         "--algos",
@@ -45,6 +45,7 @@ def main() -> None:
         fig8_traces,
         kernels_micro,
         partition_quality,
+        planserve,
         telemetry_calibration,
         topo3d_sweep,
         torus_planner,
@@ -67,6 +68,7 @@ def main() -> None:
         "trace": trace_replay.run,
         "telemetry": telemetry_calibration.run,
         "topo3d": topo3d_sweep.run,
+        "planserve": planserve.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

@@ -34,6 +34,17 @@ from .algo import (
     unregister_algorithm,
     unregister_cost_model,
 )
+from .batch_planner import (
+    ArenaCacheInfo,
+    ArenaInfo,
+    BatchPlanner,
+    arena_clear,
+    arena_info,
+    batch_support,
+    bulk_plan,
+    label_chain_matrices,
+    planner_for,
+)
 from .grid import Coord, MeshGrid, grid
 from .partition import (
     ALL_CANDIDATE_IDS,
@@ -51,6 +62,7 @@ from .planner import (
     PLANNERS,
     MulticastPlan,
     PacketPath,
+    canonical_dests,
     plan,
     plan_cache_clear,
     plan_cache_info,
@@ -101,6 +113,9 @@ from .topology import (
 
 __all__ = [
     "ALL_CANDIDATE_IDS",
+    "ArenaCacheInfo",
+    "ArenaInfo",
+    "BatchPlanner",
     "ChipletPackage",
     "Coord",
     "CostModel",
@@ -124,12 +139,17 @@ __all__ = [
     "Torus",
     "Torus3D",
     "WeightedLinkCost",
+    "arena_clear",
+    "arena_info",
     "available_algorithms",
     "available_cost_models",
     "basic_partitions",
+    "batch_support",
     "brute_force_partition",
+    "bulk_plan",
     "candidate_cost",
     "candidate_ids_for",
+    "canonical_dests",
     "chiplet",
     "dpm_partition",
     "dual_path_cost",
@@ -138,6 +158,7 @@ __all__ = [
     "get_cost_model",
     "greedy_tour",
     "grid",
+    "label_chain_matrices",
     "label_route",
     "make_topology",
     "mesh3d",
@@ -152,6 +173,7 @@ __all__ = [
     "plan_mp",
     "plan_mu",
     "plan_nmp",
+    "planner_for",
     "provider_for",
     "register_algorithm",
     "register_cost_model",

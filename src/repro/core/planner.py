@@ -66,6 +66,18 @@ class MulticastPlan:
         return delivered == set(self.dests)
 
 
+def canonical_dests(dests) -> tuple[Coord, ...]:
+    """Intern a destination set to its canonical key: sorted unique tuple.
+
+    The single canonicalization point shared by the plan cache
+    (``_plan_cached``), the device plan arena (``core.batch_planner``), and
+    the dist schedule builders — permuted or duplicated destination lists
+    all map to the same entry. Coordinates arriving as lists are normalized
+    to tuples so the result is always hashable.
+    """
+    return tuple(sorted({tuple(d) for d in dests}))
+
+
 def _deliveries_on(path: list[Coord], dests: set[Coord]) -> list[Coord]:
     seen, out = set(), []
     for node in path:
@@ -138,6 +150,64 @@ def plan_nmp(g: MeshGrid, src: Coord, dests: list[Coord]) -> MulticastPlan:
 # --------------------------------------------------------------------------
 # DPM
 # --------------------------------------------------------------------------
+def _emit_dpm_partition(
+    plan: MulticastPlan, g: MeshGrid, src: Coord, dests: list[Coord],
+    rep: Coord, mode: str, *, unicast=None, chain=None,
+) -> None:
+    """Append one final partition's delivery paths to ``plan``.
+
+    S --XY--> R head, then either the dual-path continuation (the chain
+    continues into the larger label side; the other side is a sibling child
+    re-injected at R) or MU-mode child unicasts. Shared by the host
+    construction loop (``plan_dpm``) and the batched planner's decode step
+    (``core.batch_planner``) — device-planned partitions decode through the
+    exact code path host plans are built with, which is what makes the
+    bit-identical contract hold structurally rather than by coincidence.
+
+    ``unicast(a, b)`` / ``chain(a, group, high=...)`` override the route
+    primitives (defaults: ``xy_route`` / ``path_multicast``). The batched
+    decode passes memoized equivalents so repeated (src, rep) legs across a
+    batch don't re-walk routes hop by hop; the partition-to-paths structure
+    (DP split, larger-side-first, deliveries, parent links) stays here.
+    """
+    if unicast is None:
+        unicast = functools.partial(xy_route, g)
+    if chain is None:
+        chain = functools.partial(path_multicast, g)
+    head = unicast(src, rep)
+    rest = [d for d in dests if d != rep]
+    if mode == "DP" and rest:
+        lr = g.label(*rep)
+        d_h = [d for d in rest if g.label(*d) > lr]
+        d_l = [d for d in rest if g.label(*d) < lr]
+        # The chain continues into the *larger* side from the head packet;
+        # the other side is a sibling packet re-injected at R.
+        first, second = (d_h, d_l) if len(d_h) >= len(d_l) else (d_l, d_h)
+        tail = chain(rep, first, high=first is d_h) if first else [rep]
+        full = head + tail[1:]
+        deliver = _deliveries_on(full, set(dests))
+        parent_idx = len(plan.paths)
+        plan.paths.append(PacketPath(full, deliver))
+        if second:
+            spath = chain(rep, second, high=second is d_h)
+            plan.paths.append(
+                PacketPath(
+                    spath,
+                    _deliveries_on(spath, set(second)),
+                    parent=parent_idx,
+                )
+            )
+    else:  # MU mode (or singleton partition)
+        deliver = _deliveries_on(head, set(dests))
+        parent_idx = len(plan.paths)
+        plan.paths.append(PacketPath(head, deliver))
+        remaining = [d for d in rest if d not in set(deliver)]
+        for d in remaining:
+            plan.paths.append(
+                PacketPath(unicast(rep, d), [d], parent=parent_idx)
+            )
+
+
 def plan_dpm(
     g: MeshGrid,
     src: Coord,
@@ -159,40 +229,8 @@ def plan_dpm(
     for part in result.partitions:
         if not part.dests:
             continue
-        rep = part.rep
-        assert rep is not None
-        head = xy_route(g, src, rep)
-        rest = [d for d in part.dests if d != rep]
-        if part.mode == "DP" and rest:
-            lr = g.label(*rep)
-            d_h = [d for d in rest if g.label(*d) > lr]
-            d_l = [d for d in rest if g.label(*d) < lr]
-            # The chain continues into the *larger* side from the head packet;
-            # the other side is a sibling packet re-injected at R.
-            first, second = (d_h, d_l) if len(d_h) >= len(d_l) else (d_l, d_h)
-            tail = path_multicast(g, rep, first, high=first is d_h) if first else [rep]
-            full = head + tail[1:]
-            deliver = _deliveries_on(full, set(part.dests))
-            parent_idx = len(plan.paths)
-            plan.paths.append(PacketPath(full, deliver))
-            if second:
-                spath = path_multicast(g, rep, second, high=second is d_h)
-                plan.paths.append(
-                    PacketPath(
-                        spath,
-                        _deliveries_on(spath, set(second)),
-                        parent=parent_idx,
-                    )
-                )
-        else:  # MU mode (or singleton partition)
-            deliver = _deliveries_on(head, set(part.dests))
-            parent_idx = len(plan.paths)
-            plan.paths.append(PacketPath(head, deliver))
-            remaining = [d for d in rest if d not in set(deliver)]
-            for d in remaining:
-                plan.paths.append(
-                    PacketPath(xy_route(g, rep, d), [d], parent=parent_idx)
-                )
+        assert part.rep is not None
+        _emit_dpm_partition(plan, g, src, part.dests, part.rep, part.mode)
     return plan
 
 
@@ -474,7 +512,7 @@ def plan(
         m_key = g.rows
     return _plan_cached(
         g.kind, g.n, m_key, faults, getattr(g, "params", ()), a.name, cm_key,
-        src, tuple(sorted(set(dests))),
+        src, canonical_dests(dests),
     )
 
 

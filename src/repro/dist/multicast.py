@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.batch_planner import bulk_plan
 from ..core.grid import Coord
 from ..core.planner import MulticastPlan, plan
 from ..core.routefn import faulty
@@ -213,8 +214,14 @@ def schedule_multicasts(
         topo = faulty(topo, tuple(broken_links))
     have: list[set[int]] = []
     pend: list[tuple[int, int, int, int]] = []  # (req, sender, receiver, hops)
-    for rid, (src, dests) in enumerate(requests):
-        p = plan_torus_multicast(topo, src, dests, algo, cost_model)
+    # bulk-plan the request batch through the shared plan arena (one device
+    # dispatch for all arena misses on supported fabrics; bit-identical to
+    # the per-request plan_torus_multicast calls it replaces)
+    plans = bulk_plan(
+        topo, [(src, dests) for src, dests in requests], algo,
+        cost_model=cost_model,
+    )
+    for rid, ((src, dests), p) in enumerate(zip(requests, plans)):
         src_i = topo.idx(src)
         have.append({src_i})
         targeted: set[int] = set()

@@ -72,6 +72,11 @@ def total_plan_cost(chosen, costs):
     return jnp.sum(jnp.where(chosen, costs, 0), axis=1)
 
 
+# order sentinel: "never picked by the merge loop" (leftover singles sort
+# after every real pick round; see _greedy_merge_ordered)
+NO_ORDER = jnp.int32(2**30)
+
+
 def _greedy_merge(costs, reps, np_: int = 8):
     """Algorithm 1's greedy merge over an already-computed candidate table.
 
@@ -81,6 +86,20 @@ def _greedy_merge(costs, reps, np_: int = 8):
     either. ``np_`` is the basic-partition count (8 wedges in 2-D, 26 in
     3-D); the candidate axis is ``3 * np_`` (singles + consecutive pairs +
     triples, ``core.partition.candidate_ids_for`` order).
+    """
+    return _greedy_merge_ordered(costs, reps, np_)[0]
+
+
+def _greedy_merge_ordered(costs, reps, np_: int = 8):
+    """Greedy merge that also reports *pick order*: ``(chosen, order)``.
+
+    ``order[p, ci]`` is the merge round (0-based) at which candidate ``ci``
+    won, or ``NO_ORDER`` for unpicked candidates and leftover singles. The
+    host planner emits partitions in greedy pick order followed by leftover
+    singles in ascending index — an ordering that determines path/parent
+    indices inside the final ``MulticastPlan`` — so the batched decoder
+    (``core.batch_planner``) needs the rounds, not just the winning set,
+    to reproduce host plans bit-identically.
     """
     cands = candidate_ids_for(np_)
     NC = len(cands)
@@ -110,8 +129,8 @@ def _greedy_merge(costs, reps, np_: int = 8):
         + jnp.arange(NC, dtype=jnp.int32)
     )
 
-    def step(state, _):
-        saving, covered, chosen = state
+    def step(state, rnd):
+        saving, covered, chosen, order = state
         overlap = (cand_bits[None, :] & covered[:, None]) != 0
         s = jnp.where(overlap, 0, saving)
         smax = jnp.max(s, axis=1, keepdims=True)
@@ -122,24 +141,28 @@ def _greedy_merge(costs, reps, np_: int = 8):
         has = smax[:, 0] > 0
         bbits = cand_bits[best]
         covered = jnp.where(has, covered | bbits, covered)
-        chosen = chosen.at[jnp.arange(P), best].set(
-            chosen[jnp.arange(P), best] | has
+        rows = jnp.arange(P)
+        chosen = chosen.at[rows, best].set(chosen[rows, best] | has)
+        order = order.at[rows, best].set(
+            jnp.where(has, jnp.minimum(order[rows, best], rnd), order[rows, best])
         )
-        return (s, covered, chosen), None
+        return (s, covered, chosen, order), None
 
     chosen0 = jnp.zeros((P, NC), bool)
     covered0 = jnp.zeros((P,), jnp.int32)
+    order0 = jnp.full((P, NC), NO_ORDER, jnp.int32)
     # every winning merge covers >= 2 uncovered partitions, so np_ // 2
     # rounds always reach the fixed point
-    (saving, covered, chosen), _ = jax.lax.scan(
-        step, (saving0, covered0, chosen0), None, length=np_ // 2
+    (saving, covered, chosen, order), _ = jax.lax.scan(
+        step, (saving0, covered0, chosen0, order0),
+        jnp.arange(np_ // 2, dtype=jnp.int32),
     )
     single_bit = 1 << jnp.arange(np_, dtype=jnp.int32)
     leftover = nonempty[:, :np_] & (
         (covered[:, None] & single_bit[None, :]) == 0
     )
     chosen = chosen.at[:, :np_].set(chosen[:, :np_] | leftover)
-    return chosen
+    return chosen, order
 
 
 @functools.partial(
@@ -259,3 +282,128 @@ def dpm_plan_topo(
     costs = jnp.stack(costs, 1)
     reps = jnp.stack(reps, 1)
     return _greedy_merge(costs, reps, np_), costs, reps
+
+
+def _chain_cost(sel_l, bound, ascending, label_order, w_flat, rep, NN):
+    """Price one dual-path chain side for every (packet, position).
+
+    ``sel_l`` is the selection reordered to label rank; the side's members
+    are the selected ranks strictly beyond ``bound`` (the representative's
+    label) in the walk direction. A label-ordered chain decomposes into
+    pairwise label routes between consecutive members — the label rule only
+    ever moves through labels at or below (above, descending) the current
+    target, so no pending member is passed early — which turns C_p into a
+    prefix-scan over label rank: each member's predecessor is the running
+    max (min) of selected ranks before it, or the representative when none.
+    Returns (side cost (B,), side nonempty (B,)).
+    """
+    pos = jnp.arange(NN, dtype=jnp.int32)
+    if ascending:
+        active = sel_l & (pos[None, :] > bound[:, None])
+        walk = active
+        order_nodes = label_order
+    else:
+        active = sel_l & (pos[None, :] < bound[:, None])
+        walk = jnp.flip(active, axis=1)
+        order_nodes = jnp.flip(label_order)
+    idx_seq = jnp.where(walk, pos[None, :], -1)
+    run = jax.lax.cummax(idx_seq, axis=1)
+    prev = jnp.concatenate(
+        [jnp.full((run.shape[0], 1), -1, run.dtype), run[:, :-1]], axis=1
+    )
+    prev_node = jnp.where(
+        prev >= 0, jnp.take(order_nodes, jnp.clip(prev, 0)), rep[:, None]
+    )
+    cur_node = order_nodes[None, :]
+    contrib = jnp.take(w_flat, prev_node * NN + cur_node)
+    return (
+        jnp.sum(jnp.where(walk, contrib, 0.0), axis=1),
+        active.any(axis=1),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("np_", "overhead", "include_source_leg")
+)
+def dpm_plan_exact(
+    dest_mask: jax.Array,  # (B, NN) bool destination sets
+    src_idx: jax.Array,  # (B,) int32 Topology.idx of each source
+    part_of: jax.Array,  # (B, NN) int32 wedge membership (all nodes)
+    labels: jax.Array,  # (NN,) int32 snake labels
+    label_order: jax.Array,  # (NN,) int32 node index at each label rank
+    dist: jax.Array,  # (NN, NN) provider-route hop counts
+    w_uni: jax.Array,  # (NN, NN) unicast-route prices (C_t terms)
+    w_high: jax.Array,  # (NN, NN) HIGH-subnetwork label-route prices
+    w_low: jax.Array,  # (NN, NN) LOW-subnetwork label-route prices
+    *,
+    np_: int,
+    overhead: float = 0.0,
+    include_source_leg: bool = True,
+):
+    """Algorithm 1 batched with the *full* Definition 2 objective.
+
+    Unlike ``dpm_plan_topo`` (which prices candidates by C_t only), this
+    evaluates both C_t and C_p per candidate — C_p via the label-chain
+    prefix scan of ``_chain_cost`` over the dense pairwise label-route
+    price matrices — and records the MU/DP mode choice and the greedy
+    pick order, everything the host decode needs to rebuild each
+    ``MulticastPlan`` bit-identically (``core.batch_planner``; exactness
+    conditions in ``batch_support`` there). Returns
+    ``(chosen, order, reps, mode_mu, costs)``, all ``(B, 3 * np_)`` over
+    the ``candidate_ids_for`` axis.
+    """
+    import numpy as _np
+
+    cands = candidate_ids_for(np_)
+    NC = len(cands)
+    B, NN = dest_mask.shape
+    dist = dist.astype(jnp.int32)
+    w_uni = w_uni.astype(jnp.float32)
+    wh_flat = w_high.astype(jnp.float32).reshape(-1)
+    wl_flat = w_low.astype(jnp.float32).reshape(-1)
+    dsrc = jnp.take(dist, src_idx, axis=0)  # (B, NN)
+    w_src = jnp.take(w_uni, src_idx, axis=0)
+    # All candidates evaluated as one stacked (NC * B, NN) problem — a
+    # static candidate->wedge incidence table turns the per-candidate
+    # membership test into a single gather, and everything downstream is
+    # one tensor op per step instead of NC of them.
+    inc = _np.zeros((NC, np_), bool)
+    for ci, ids in enumerate(cands):
+        inc[ci, list(ids)] = True
+    member = jnp.take(jnp.asarray(inc), part_of, axis=1)  # (NC, B, NN)
+    sel = (dest_mask[None] & member).reshape(NC * B, NN)
+    any_sel = sel.any(1)
+    # Definition 1 representative: min (dist-to-src, label)
+    dsrc_t = jnp.broadcast_to(dsrc[None], (NC, B, NN)).reshape(NC * B, NN)
+    key = jnp.where(sel, dsrc_t * BIG + labels[None], jnp.int32(2**30))
+    rep = jnp.argmin(key, 1).astype(jnp.int32)
+    # C_t: one unicast worm per non-representative destination
+    w_rep = jnp.take(w_uni, rep, axis=0)  # (NC * B, NN) prices from rep
+    cnt = jnp.sum(sel.astype(jnp.float32), 1)
+    cost_mu = jnp.sum(jnp.where(sel, w_rep, 0.0), 1)
+    cost_mu = cost_mu + jnp.maximum(cnt - 1.0, 0.0) * float(overhead)
+    # C_p: label-ordered chains from the representative, one per side
+    rep_lab = jnp.take(labels, rep)
+    sel_l = jnp.take_along_axis(
+        sel, jnp.broadcast_to(label_order[None, :], sel.shape), axis=1
+    )
+    hi, any_h = _chain_cost(sel_l, rep_lab, True, label_order, wh_flat, rep, NN)
+    lo, any_l = _chain_cost(sel_l, rep_lab, False, label_order, wl_flat, rep, NN)
+    cost_dp = (
+        hi + lo
+        + (any_h.astype(jnp.float32) + any_l.astype(jnp.float32))
+        * float(overhead)
+    )
+    # ties prefer MU (the paper: D_H/D_L computation is then skipped)
+    mode_mu = cost_mu <= cost_dp
+    cost = jnp.minimum(cost_mu, cost_dp)
+    if include_source_leg:
+        w_src_t = jnp.broadcast_to(
+            w_src[None], (NC, B, NN)
+        ).reshape(NC * B, NN)
+        cost = cost + jnp.take_along_axis(w_src_t, rep[:, None], 1)[:, 0]
+    costs = jnp.where(any_sel, cost, 0.0).reshape(NC, B).T
+    reps = jnp.where(any_sel, rep, -1).reshape(NC, B).T
+    modes = (mode_mu | ~any_sel).reshape(NC, B).T
+    chosen, order = _greedy_merge_ordered(costs, reps, np_)
+    return chosen, order, reps, modes, costs

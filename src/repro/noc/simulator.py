@@ -167,6 +167,29 @@ class WormholeSim:
             flits=flits,
         )
 
+    def add_requests(self, algo, requests, cost_model=None) -> list[list[int]]:
+        """Bulk admission: plan every request through the shared plan arena
+        (``core.batch_planner.bulk_plan`` — one jitted device dispatch for
+        all arena misses where the fabric supports it, host planning
+        otherwise) and ingest each plan at its request time.
+
+        ``requests`` is an iterable of ``noc.traffic.Request``-likes
+        (``.src``, ``.dests``, ``.time``, optional ``.flits``). Plans are
+        bit-identical to per-request ``add_request`` calls; returns the
+        per-request packet-id lists in order.
+        """
+        from ..core.batch_planner import bulk_plan
+
+        reqs = list(requests)
+        plans = bulk_plan(
+            self.g, [(r.src, r.dests) for r in reqs], algo,
+            cost_model=cost_model,
+        )
+        return [
+            self.add_plan(p, r.time, flits=getattr(r, "flits", None))
+            for r, p in zip(reqs, plans)
+        ]
+
     def add_plan(
         self, plan: MulticastPlan, enqueue_time: int, flits: int | None = None
     ) -> list[int]:

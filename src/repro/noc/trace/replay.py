@@ -230,11 +230,12 @@ def replay_host(
             pcfg.topology_params,
         )
         sim = WormholeSim(pcfg)
-        for r in _phase_requests(ph, topo, flit_bytes, max_flits):
-            sim.add_request(
-                algo, r.src, r.dests, r.time, cost_model=cost_model,
-                flits=r.flits,
-            )
+        # bulk admission: the whole phase plans through the shared plan
+        # arena in one device dispatch where the fabric supports it
+        sim.add_requests(
+            algo, _phase_requests(ph, topo, flit_bytes, max_flits),
+            cost_model=cost_model,
+        )
         st = sim.run(ph.span + cfg.drain_grace, drain=True)
         if st.packets_finished != st.packets_created:
             raise RuntimeError(

@@ -38,7 +38,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ...core.grid import Coord
-from ...core.planner import MulticastPlan, plan
+from ...core.planner import MulticastPlan
 from ...core.topology import make_topology
 from ..config import NoCConfig
 from ..traffic import Workload
@@ -129,8 +129,16 @@ def compile_workload(
     )
     ports = getattr(g, "ports", 4)
     rows: list[tuple] = []  # (hops, deliveries, enqueue, parent_pid, flits)
-    for r in workload.requests:
-        pl_ = plan(algo, g, r.src, r.dests, cost_model=cost_model)
+    # bulk-plan the whole workload through the shared plan arena: one
+    # jitted device dispatch for all arena misses where supported (plans
+    # are bit-identical to per-request plan() calls)
+    from ...core.batch_planner import bulk_plan
+
+    plans = bulk_plan(
+        g, [(r.src, r.dests) for r in workload.requests], algo,
+        cost_model=cost_model,
+    )
+    for r, pl_ in zip(workload.requests, plans):
         nf = cfg.flits_per_packet
         rf = getattr(r, "flits", None)
         if rf is not None:

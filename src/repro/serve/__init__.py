@@ -1,4 +1,14 @@
-"""Serving: batched generate + queue-based batch server."""
-from .engine import BatchServer, GenResult, Request, Response, generate
+"""Serving: batched generate + queue-based batch server + the streaming
+plan server over the device plan arena (``planserve``)."""
+from .engine import BatchServer, GenResult, Request, Response, generate, take_batch
+from .planserve import PlanServer
 
-__all__ = ["BatchServer", "GenResult", "Request", "Response", "generate"]
+__all__ = [
+    "BatchServer",
+    "GenResult",
+    "PlanServer",
+    "Request",
+    "Response",
+    "generate",
+    "take_batch",
+]

@@ -3,6 +3,7 @@ queue-based batch server (deliverable b's serving example uses this)."""
 from __future__ import annotations
 
 import queue
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -69,6 +70,44 @@ def generate(
     return GenResult(out, prefill_ms, decode_ms)
 
 
+_POLL_S = 0.05  # stop-event poll interval while blocked on an empty queue
+
+
+def take_batch(q: queue.Queue, max_batch: int, max_wait_s: float,
+               stop: threading.Event | None = None) -> list:
+    """Deadline batching over any queue: block for the first item, then
+    admit more until the batch is full or ``max_wait_s`` has elapsed since
+    the first arrival.
+
+    The shared batching primitive of ``BatchServer`` and the plan server's
+    streaming driver (``serve.planserve``). With ``stop`` given, the
+    blocking wait polls the event and returns ``[]`` once it fires and the
+    queue is empty — the clean-shutdown path ``close()`` relies on; queued
+    items are still drained into batches first.
+    """
+    first = None
+    while first is None:
+        if stop is None:
+            first = q.get()
+            break
+        try:
+            first = q.get(timeout=_POLL_S)
+        except queue.Empty:
+            if stop.is_set():
+                return []
+    out = [first]
+    deadline = time.monotonic() + max_wait_s
+    while len(out) < max_batch:
+        left = deadline - time.monotonic()
+        if left <= 0:
+            break
+        try:
+            out.append(q.get(timeout=left))
+        except queue.Empty:
+            break
+    return out
+
+
 @dataclass
 class Request:
     rid: int
@@ -87,7 +126,12 @@ class Response:
 class BatchServer:
     """Collect requests into fixed-size batches (pad to the longest prompt),
     run generate(), return per-request responses. Continuous-batching-lite:
-    a new batch is admitted as soon as the previous one retires."""
+    a new batch is admitted as soon as the previous one retires.
+
+    ``close()`` stops admission (further ``submit`` raises) and unblocks
+    any ``serve_once`` waiting on an empty queue; with ``drain=True`` it
+    serves out whatever was already queued first. ``queue_depth`` reports
+    the requests waiting for admission."""
 
     def __init__(self, params, cfg: ArchConfig, run: RunConfig,
                  max_batch: int = 8, max_wait_s: float = 0.05):
@@ -95,22 +139,47 @@ class BatchServer:
         self.max_batch, self.max_wait_s = max_batch, max_wait_s
         self.queue: queue.Queue[Request] = queue.Queue()
         self.stats = {"batches": 0, "requests": 0, "tokens": 0}
+        self._closed = threading.Event()
+
+    @property
+    def queue_depth(self) -> int:
+        return self.queue.qsize()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
 
     def submit(self, req: Request):
+        if self._closed.is_set():
+            raise RuntimeError("BatchServer is closed")
         self.queue.put(req)
 
+    def close(self, drain: bool = True) -> list[Response]:
+        """Stop admitting requests. With ``drain`` (default), serve every
+        already-queued request to completion and return those responses;
+        without, queued requests are dropped."""
+        self._closed.set()
+        out: list[Response] = []
+        if drain:
+            while not self.queue.empty():
+                out.extend(self.serve_once())
+        else:
+            while True:
+                try:
+                    self.queue.get_nowait()
+                except queue.Empty:
+                    break
+        return out
+
     def _take_batch(self) -> list[Request]:
-        reqs = [self.queue.get()]
-        deadline = time.monotonic() + self.max_wait_s
-        while len(reqs) < self.max_batch and time.monotonic() < deadline:
-            try:
-                reqs.append(self.queue.get(timeout=max(0, deadline - time.monotonic())))
-            except queue.Empty:
-                break
-        return reqs
+        return take_batch(
+            self.queue, self.max_batch, self.max_wait_s, stop=self._closed
+        )
 
     def serve_once(self) -> list[Response]:
         reqs = self._take_batch()
+        if not reqs:  # closed and drained
+            return []
         S = max(len(r.prompt) for r in reqs)
         steps = max(r.max_tokens for r in reqs)
         B = len(reqs)

@@ -1,0 +1,319 @@
+"""Batched device planning + plan arena (core/batch_planner, ISSUE 10).
+
+The load-bearing property is **bit-identity**: every plan the batched
+planner returns equals host ``plan()`` field for field — across algorithms
+(DPM / DPM-E), cost models (hops / weighted), every registered topology
+kind, and on degraded fabrics via the host fallback path. Plus: canonical
+dest-set interning shared with the plan cache, arena LRU hit/miss/eviction
+attribution mirroring ``plan_cache_info()``, and the consumer wiring
+(simulator bulk admission, dist schedule builder).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BatchPlanner,
+    arena_clear,
+    arena_info,
+    batch_support,
+    bulk_plan,
+    canonical_dests,
+    chiplet,
+    faulty,
+    grid,
+    mesh3d,
+    plan,
+    plan_cache_clear,
+    plan_cache_info,
+    planner_for,
+    registered_topology_kinds,
+    torus,
+    torus3d,
+)
+import repro.core.batch_planner as bpm
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    plan_cache_clear()
+    arena_clear()
+    yield
+    plan_cache_clear()
+    arena_clear()
+
+
+def _requests(g, n, seed, kmax=8):
+    nodes = g.nodes()
+    rng = random.Random(seed)
+    out, seen = [], set()
+    while len(out) < n:
+        src = rng.choice(nodes)
+        k = rng.randint(2, min(kmax, len(nodes) - 1))
+        dests = tuple(
+            sorted(rng.sample([x for x in nodes if x != src], k))
+        )
+        if (src, dests) in seen:
+            continue
+        seen.add((src, dests))
+        out.append((src, list(dests)))
+    return out
+
+
+# the 2-D kinds and the chiplet package share one jit specialization
+# (NN=16, np_=8); the 3-D kinds exercise the 26-wedge candidate table and
+# heterogeneous z-links
+FABRICS = {
+    "mesh": grid(4),
+    "torus": torus(4, 4),
+    "mesh3d": mesh3d(3, 3, 3, z_weight=2.0),
+    "torus3d": torus3d(3, 3, 2),
+    "chiplet": chiplet(4),
+}
+
+
+def test_fabric_fixtures_cover_every_registered_kind():
+    """If a new topology kind registers, this file must grow a fabric for
+    it — the bit-identity sweep below is only as wide as this dict."""
+    assert set(FABRICS) == set(registered_topology_kinds())
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", sorted(FABRICS))
+@pytest.mark.parametrize("algo,cm", [("DPM", "hops"), ("DPM-E", "weighted")])
+def test_batched_plans_bit_identical_all_kinds(kind, algo, cm):
+    g = FABRICS[kind]
+    bp = BatchPlanner(g, algo, cm)
+    assert bp.support.ok, bp.support.reason
+    reqs = _requests(g, 10, seed=sum(map(ord, kind + algo + cm)))
+    got = bp.plan_many(reqs)
+    for (src, dests), pb in zip(reqs, got):
+        assert pb == plan(algo, g, src, dests, cost_model=cm)
+    assert bp.info().batched_plans == len(reqs)
+    assert bp.info().host_plans == 0
+
+
+@pytest.mark.parametrize("algo,cm", [("DPM", "weighted"), ("DPM-E", "hops")])
+def test_batched_plans_bit_identical_remaining_combos(algo, cm):
+    """The algorithm x cost-model combinations the kind sweep skips."""
+    g = FABRICS["mesh"]
+    bp = BatchPlanner(g, algo, cm)
+    assert bp.support.ok, bp.support.reason
+    reqs = _requests(g, 10, seed=7)
+    for (src, dests), pb in zip(reqs, bp.plan_many(reqs)):
+        assert pb == plan(algo, g, src, dests, cost_model=cm)
+
+
+@settings(max_examples=40)
+@given(st.integers(0, 10**9))
+def test_batched_plan_bit_identical_property(seed):
+    """Property form: random (src, dest-set) instances on the shared mesh
+    fabric, one at a time through the arena, always equal host plan()."""
+    g = FABRICS["mesh"]
+    bp = planner_for(g, "DPM")
+    (src, dests), = _requests(g, 1, seed)
+    assert bp.plan_one(src, dests) == plan("DPM", g, src, dests)
+
+
+def test_degraded_fabric_falls_back_to_host():
+    g = faulty(grid(4), (((0, 0), (1, 0)),))
+    sup = batch_support(g)
+    assert not sup.ok and "degraded" in sup.reason
+    bp = BatchPlanner(g, "DPM")
+    reqs = _requests(g, 6, seed=3)
+    got = bp.plan_many(reqs)
+    for (src, dests), pb in zip(reqs, got):
+        assert pb == plan("DPM", g, src, dests)
+    info = bp.info()
+    assert info.host_plans == len(reqs)
+    assert info.batched_plans == 0 and info.dispatches == 0
+
+
+def test_energy_objective_is_gated_off_device():
+    """The energy model's pJ constants are not dyadic rationals — the
+    f32-exactness gate must reject it (DPM-E then host-plans)."""
+    sup = batch_support(grid(4), "DPM-E")  # default model: energy
+    assert not sup.ok and "dyadic" in sup.reason
+
+
+def test_non_dpm_algorithms_have_no_device_twin():
+    sup = batch_support(grid(4), "MU")
+    assert not sup.ok and "device twin" in sup.reason
+
+
+# ---------------------------------------------------------------------------
+# Canonical dest-set interning (shared helper)
+# ---------------------------------------------------------------------------
+def test_canonical_dests_sorts_dedups_and_normalizes():
+    assert canonical_dests([(2, 1), (0, 3), (2, 1)]) == ((0, 3), (2, 1))
+    assert canonical_dests([[2, 1], (0, 3)]) == ((0, 3), (2, 1))  # lists ok
+    assert canonical_dests([]) == ()
+
+
+def test_permuted_dests_share_one_plan_cache_entry():
+    g = grid(4)
+    dests = [(1, 2), (3, 0), (2, 3)]
+    p1 = plan("DPM", g, (0, 0), dests)
+    p2 = plan("DPM", g, (0, 0), list(reversed(dests)))
+    p3 = plan("DPM", g, (0, 0), dests + [dests[0]])  # duplicate entry
+    assert p1 is p2 is p3  # literally the same cached object
+    info = plan_cache_info()
+    assert info.misses == 1 and info.hits == 2
+
+
+def test_permuted_dests_share_one_arena_entry():
+    g = grid(4)
+    bp = BatchPlanner(g, "DPM")
+    dests = [(1, 2), (3, 0), (2, 3)]
+    a, b = bp.plan_many(
+        [((0, 0), dests), ((0, 0), list(reversed(dests)))]
+    )
+    assert a is b
+    info = bp.info()
+    # second request deduped against the first inside one plan_many call
+    assert info.misses == 2 and info.currsize == 1
+    c = bp.plan_one((0, 0), dests + [dests[-1]])
+    assert c is a
+    assert bp.info().hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Arena LRU accounting (mirrors plan_cache_info semantics)
+# ---------------------------------------------------------------------------
+def test_arena_lru_hit_miss_eviction_attribution():
+    g = grid(4)
+    bp = BatchPlanner(g, "DPM", maxsize=4)
+    reqs = _requests(g, 6, seed=11)
+    bp.plan_many(reqs)
+    info = bp.info()
+    assert info.misses == 6 and info.evictions == 2 and info.currsize == 4
+    # the two oldest were evicted: re-planning them misses again; the
+    # newest still hits and refreshes its LRU slot
+    bp.plan_many([reqs[-1]])
+    assert bp.info().hits == 1
+    bp.plan_many([reqs[0]])
+    assert bp.info().misses == 7
+
+
+def test_arena_info_aggregates_by_algo_and_cost_model():
+    g = grid(4)
+    reqs = _requests(g, 4, seed=5)
+    bulk_plan(g, reqs, "DPM")
+    bulk_plan(g, reqs, "DPM", cost_model="weighted")
+    bulk_plan(g, reqs[:2], "DPM")  # hits on the first planner
+    info = arena_info()
+    assert info.hits == 2 and info.misses == 8
+    assert info.by_key[("DPM", "hops")]["misses"] == 4
+    assert info.by_key[("DPM", "hops")]["hits"] == 2
+    assert info.by_key[("DPM", "weighted")]["misses"] == 4
+    arena_clear()
+    assert arena_info().misses == 0 and arena_info().currsize == 0
+
+
+def test_planner_for_shares_one_arena_per_config():
+    g = grid(4)
+    assert planner_for(g, "DPM") is planner_for(g, "DPM")
+    assert planner_for(g, "DPM") is not planner_for(g, "DPM", "weighted")
+
+
+def test_bulk_plan_empty_and_order_preserving():
+    g = grid(4)
+    assert bulk_plan(g, []) == []
+    reqs = _requests(g, 5, seed=9)
+    plans = bulk_plan(g, reqs)
+    for (src, dests), p in zip(reqs, plans):
+        assert p.src == src and set(p.dests) == set(dests)
+
+
+# ---------------------------------------------------------------------------
+# Consumer wiring: simulator driver + dist schedule builder
+# ---------------------------------------------------------------------------
+def test_simulator_bulk_admission_matches_per_request(monkeypatch):
+    from repro.noc.config import NoCConfig
+    from repro.noc.simulator import WormholeSim
+    from repro.noc.traffic import Request
+
+    cfg = NoCConfig(n=4, m=4)
+    reqs = [
+        Request(0, (0, 0), [(3, 3), (1, 2)]),
+        Request(1, (2, 2), [(0, 3)], flits=3),
+        Request(3, (0, 0), [(1, 2), (3, 3)]),  # permuted duplicate
+    ]
+    sim_a = WormholeSim(cfg)
+    sim_a.add_requests("DPM", reqs)
+    assert planner_for(grid(4), "DPM").info().batched_plans > 0
+    sim_b = WormholeSim(cfg)
+    for r in reqs:
+        sim_b.add_request("DPM", r.src, r.dests, r.time, flits=r.flits)
+    sa = sim_a.run(300, drain=True)
+    sb = sim_b.run(300, drain=True)
+    assert sa.packets_finished == sb.packets_finished
+    assert sa.flit_link_traversals == sb.flit_link_traversals
+
+
+def test_dist_schedule_builder_uses_arena_and_matches_host(monkeypatch):
+    from repro.dist.multicast import schedule_multicasts
+
+    t = torus(4, 4)
+    reqs = [((0, 0), [(2, 2), (1, 3)]), ((3, 3), [(0, 1), (2, 0)])]
+    sched = schedule_multicasts(t, reqs)
+    assert planner_for(t, "DPM").info().batched_plans > 0
+    # force the host path (support gate off) and require identical rounds
+    arena_clear()
+    monkeypatch.setattr(
+        bpm, "batch_support",
+        lambda *a, **k: bpm._Support(False, "forced by test"),
+    )
+    sched_host = schedule_multicasts(t, reqs)
+    assert planner_for(t, "DPM").info().host_plans > 0
+    assert sched.rounds == sched_host.rounds
+    assert sched.hops == sched_host.hops
+
+
+def test_xsim_compile_bulk_plans_through_arena():
+    from repro.noc.config import NoCConfig
+    from repro.noc.traffic import Request, Workload
+    from repro.noc.xsim.compile import compile_workload
+
+    cfg = NoCConfig(n=4, m=4)
+    wl = Workload(
+        "t",
+        [Request(0, (0, 0), [(3, 3)]), Request(1, (2, 2), [(0, 3), (1, 0)])],
+        1,
+    )
+    ct = compile_workload(cfg, wl, "DPM")
+    assert ct.num_packets >= 2
+    assert planner_for(grid(4), "DPM").info().batched_plans > 0
+
+
+def test_registry_change_clears_arenas():
+    from repro.core import temporary_algorithm, plan_dpm
+
+    g = grid(4)
+    bulk_plan(g, _requests(g, 3, seed=2))
+    assert arena_info().misses == 3
+    with temporary_algorithm(plan_dpm, name="DPM-tmp"):
+        pass  # registration mutates the registry -> arenas must drop
+    assert arena_info().misses == 0
+
+
+def test_batch_padding_and_multi_chunk_batches():
+    g = grid(4)
+    bp = BatchPlanner(g, "DPM")
+    one = bp.plan_many(_requests(g, 1, seed=21))
+    assert len(one) == 1
+    n = bpm.DISPATCH_CHUNK + 3  # forces a second (padded) chunk
+    reqs = _requests(g, n, seed=22, kmax=6)
+    got = bp.plan_many(reqs)
+    assert len(got) == n
+    assert bp.info().dispatches >= 3  # 1 + ceil(n / DISPATCH_CHUNK)
+    sample = random.Random(0).sample(range(n), 12)
+    for i in sample:
+        src, dests = reqs[i]
+        assert got[i] == plan("DPM", g, src, dests)

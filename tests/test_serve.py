@@ -1,14 +1,22 @@
-"""serve/engine.py tests: greedy generate determinism, BatchServer batch
+"""serve layer tests: greedy generate determinism, BatchServer batch
 formation (max_batch cutoff, left-pad alignment, per-request slicing, rid
-routing), and deterministic plan reuse across serve_once calls."""
+routing), deterministic plan reuse across serve_once calls, the shared
+``take_batch`` deadline-batching primitive + close/drain lifecycle, and the
+streaming ``PlanServer`` over the device plan arena."""
+import queue
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import SMOKES
+from repro.core import arena_clear, grid, plan, plan_cache_clear
 from repro.models import RunConfig, model_init
-from repro.serve.engine import BatchServer, Request, generate
+from repro.serve import PlanServer
+from repro.serve.engine import BatchServer, Request, generate, take_batch
 
 RUN = RunConfig(
     remat="none",
@@ -116,3 +124,104 @@ def test_batch_server_reuse_is_deterministic(tiny):
         assert a.rid == b.rid
         np.testing.assert_array_equal(a.tokens, b.tokens)
     assert srv.stats == {"batches": 2, "requests": 4, "tokens": 16}
+
+
+# --------------------------------------------------------------- take_batch
+def test_take_batch_cuts_at_max_batch_then_drains():
+    q = queue.Queue()
+    for i in range(5):
+        q.put(i)
+    assert take_batch(q, 3, 0.01) == [0, 1, 2]
+    assert take_batch(q, 8, 0.01) == [3, 4]
+
+
+def test_take_batch_stop_event_drains_then_returns_empty():
+    q = queue.Queue()
+    stop = threading.Event()
+    stop.set()
+    q.put("x")  # items queued before the stop still form a batch
+    assert take_batch(q, 4, 0.01, stop=stop) == ["x"]
+    assert take_batch(q, 4, 0.01, stop=stop) == []  # stopped + empty
+
+
+def test_batch_server_queue_depth_and_close_drain(tiny):
+    params, cfg = tiny
+    srv = BatchServer(params, cfg, RUN, max_batch=4, max_wait_s=0.01)
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        srv.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5),
+                           max_tokens=2))
+    assert srv.queue_depth == 3 and not srv.closed
+    out = srv.close(drain=True)
+    assert [r.rid for r in out] == [0, 1, 2]  # queued work served out
+    assert srv.closed and srv.queue_depth == 0
+    with pytest.raises(RuntimeError):
+        srv.submit(Request(rid=9, prompt=rng.integers(0, cfg.vocab, size=5),
+                           max_tokens=1))
+    assert srv.serve_once() == []  # closed + drained: returns, no block
+
+
+def test_batch_server_close_without_drain_drops_queue(tiny):
+    params, cfg = tiny
+    srv = BatchServer(params, cfg, RUN, max_batch=4, max_wait_s=0.01)
+    srv.submit(Request(rid=0, prompt=np.zeros(4, np.int32), max_tokens=1))
+    assert srv.close(drain=False) == []
+    assert srv.queue_depth == 0 and srv.stats["requests"] == 0
+
+
+# --------------------------------------------------------------- PlanServer
+@pytest.fixture()
+def _fresh_arena():
+    plan_cache_clear()
+    arena_clear()
+    yield
+    plan_cache_clear()
+    arena_clear()
+
+
+def test_plan_server_futures_match_host_plan(_fresh_arena):
+    g = grid(4)
+    reqs = [((0, 0), [(3, 3), (1, 2)]), ((2, 2), [(0, 3)])]
+    with PlanServer(g, "DPM", max_wait_s=0.01) as ps:
+        futs = [ps.submit(src, dests) for src, dests in reqs]
+        plans = [f.result(timeout=60) for f in futs]
+    for p, (src, dests) in zip(plans, reqs):
+        assert p == plan("DPM", g, src, dests)
+    assert ps.closed
+    with pytest.raises(RuntimeError):
+        ps.submit((0, 0), [(1, 1)])
+    assert ps.stats["requests"] == 2
+
+
+def test_plan_server_prefetch_warms_arena(_fresh_arena):
+    g = grid(4)
+    reqs = [((0, 0), ((1, 3), (2, 2))), ((3, 0), ((0, 2),))]
+    with PlanServer(g, "DPM", max_wait_s=0.005) as ps:
+        ps.prefetch(reqs)
+        deadline = time.monotonic() + 60
+        while ps.info().misses < len(reqs) and time.monotonic() < deadline:
+            time.sleep(0.01)
+        before = ps.info().misses
+        p = ps.plan(*reqs[0])  # arena hit — prefetch already decoded it
+    assert p == plan("DPM", g, reqs[0][0], list(reqs[0][1]))
+    assert ps.info().misses == before
+    assert ps.info().hits >= 1
+
+
+def test_plan_server_close_drains_pending_futures(_fresh_arena):
+    g = grid(4)
+    ps = PlanServer(g, "DPM", max_wait_s=0.001)
+    futs = [ps.submit((0, 0), [((i % 3) + 1, 3)]) for i in range(8)]
+    ps.close(drain=True)
+    assert all(f.result(timeout=5) is not None for f in futs)
+    assert ps.stats["requests"] == 8
+
+
+def test_plan_server_propagates_planning_errors(_fresh_arena):
+    g = grid(4)
+    with PlanServer(g, "DPM", max_wait_s=0.001) as ps:
+        bad = ps.submit((0, 0), [(9, 9)])  # off-fabric destination
+        with pytest.raises(Exception):
+            bad.result(timeout=60)
+        ok = ps.submit((0, 0), [(1, 1)])  # the worker keeps serving
+        assert ok.result(timeout=60) == plan("DPM", g, (0, 0), [(1, 1)])
